@@ -1,0 +1,58 @@
+"""Shared benchmark plumbing: tiny-model pipeline construction, timing, CSV.
+
+CPU-host benchmarking protocol (this container is CPU-only; TPU v5e is the
+target): every figure is reproduced at reduced scale with REAL measured
+wall-times, plus an analytic projection to the paper's cluster sizes driven
+by the measured data volumes and the v5e/RoCE bandwidth constants. The
+projection model is printed alongside so nothing is hidden.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.core import build_pipeline
+from repro.rl import RLConfig
+
+ROWS: List[Dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append({"name": name, "us": us_per_call, "derived": derived})
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def tiny_cfg(arch: str = "qwen2.5-7b", **kw):
+    base = dict(vocab_size=260, num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, head_dim=16, d_ff=128)
+    base.update(kw)
+    return reduced(ARCHS[arch], **base)
+
+
+def bench_pipeline(cfg, rl: RLConfig, *, centralized: bool, iters: int = 3,
+                   prompts_per_iter: int = 8, warmup: int = 1, seed: int = 0):
+    """Returns (s_per_iter, tokens_per_iter, pipeline)."""
+    pipe = build_pipeline(cfg, rl, prompts_per_iter=prompts_per_iter,
+                          centralized=centralized, seed=seed)
+    for _ in range(warmup):
+        pipe.run(1)
+    pipe.buffer.stats.reset()
+    t0 = time.perf_counter()
+    hist = pipe.run(iters)
+    dt = (time.perf_counter() - t0) / iters
+    g = rl.group_size if rl.algorithm == "grpo" else 1
+    seqs = prompts_per_iter * g
+    # paper metric: total tokens in the global batch / iteration time
+    tokens = seqs * (6 + rl.max_new_tokens)  # prompt len 6 + responses
+    return dt, tokens, pipe
+
+
+# hardware constants for projections (paper testbed + v5e target)
+HOST_NIC_GBPS = 25e9 / 8 * 8  # 25 GB/s effective RoCE v2 per-host (bytes/s)
+ICI_BPS = 50e9  # per-link ICI
+HBM_BPS = 819e9
+PEAK_FLOPS = 197e12

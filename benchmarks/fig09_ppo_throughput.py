@@ -1,0 +1,40 @@
+"""Fig. 9 — PPO end-to-end throughput: DistFlow vs the single-controller
+baseline.
+
+Measured: tokens/s for both dataflow arms on CPU at reduced scale (same
+pipeline code; only the databuffer arm differs) + the per-token trajectory
+bytes. Projected: iteration-time model of benchmarks/paper_scale.py,
+calibrated on exactly one published number (1.64x @ 128 GPUs); the other
+scales are predictions compared against the paper's 1.09-1.64x band.
+"""
+from __future__ import annotations
+
+from benchmarks import paper_scale as ps
+from benchmarks.common import bench_pipeline, emit, tiny_cfg
+from repro.rl import RLConfig
+
+
+def main() -> None:
+    cfg = tiny_cfg()
+    rl = RLConfig(algorithm="ppo", max_new_tokens=16, lr=1e-5)
+
+    dt_d, tok, pipe_d = bench_pipeline(cfg, rl, centralized=False, iters=3)
+    dt_c, _, pipe_c = bench_pipeline(cfg, rl, centralized=True, iters=3)
+    emit("fig09/ppo_distflow_tokens_per_s", dt_d * 1e6, f"{tok / dt_d:.1f} tok/s")
+    emit("fig09/ppo_centralized_tokens_per_s", dt_c * 1e6, f"{tok / dt_c:.1f} tok/s")
+    emit("fig09/ppo_measured_speedup_1host", 0.0, f"{dt_c / dt_d:.2f}x")
+
+    # measured trajectory bytes/token (sanity vs the model's BPT_CAL)
+    seqs = 8 * 1  # prompts x group
+    bpt = pipe_c.buffer.stats.bytes_through_controller / 3 / seqs / 22 / 2
+    emit("fig09/measured_traj_bytes_per_token", 0.0, f"{bpt:.1f}B (model {ps.BPT_CAL}B)")
+
+    emit("fig09/controller_bw_calibrated", 0.0,
+         f"{ps.calibrated_controller_bps() / 1e6:.0f} MB/s from 1.64x@128gpu")
+    for gpus, paper in ((32, "1.09-1.2x"), (64, "~1.35x"), (128, "1.64x [cal]")):
+        emit(f"fig09/ppo_projected_speedup_{gpus}gpu", 0.0,
+             f"{ps.speedup(gpus):.2f}x (paper {paper})")
+
+
+if __name__ == "__main__":
+    main()

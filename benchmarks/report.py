@@ -1,0 +1,105 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from results/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report > results/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import ICI_BPS, ICI_LINKS, HBM_BPS, PEAK_FLOPS, analyze
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results")
+
+
+def gib(b):
+    return "-" if b is None else f"{b / 2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    rows = json.load(open(os.path.join(RESULTS, "dryrun_compile.json")))
+    out = ["| arch | shape | mesh | peak GiB/dev | args GiB/dev | compile s | ok |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("ok"):
+            m = r["memory"]
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {gib(m['peak_bytes'])} "
+                f"| {gib(m['argument_bytes'])} | {r['compile_s']} | OK |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - "
+                       f"| FAIL: {r['error'][:60]} |")
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    out.append(f"\n**{n_ok}/{len(rows)} cells compile** "
+               f"(33 applicable cells x 2 meshes; skips per DESIGN.md §5).")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    path = os.path.join(RESULTS, "dryrun_roofline.json")
+    rows = json.load(open(path))
+    mem = json.load(open(os.path.join(RESULTS, "dryrun_compile.json")))
+    table = analyze(rows, mem)
+    out = ["| arch | shape | compute ms | memory ms | collective ms | dominant "
+           "| step ms | useful (6ND/HLO) | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for t in table:
+        if not t["ok"]:
+            out.append(f"| {t['arch']} | {t['shape']} | FAIL {t.get('error','')[:50]} "
+                       "| | | | | | |")
+            continue
+        out.append(
+            f"| {t['arch']} | {t['shape']} | {t['compute_s']*1e3:.2f} "
+            f"| {t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} "
+            f"| **{t['dominant']}** | {t['step_s']*1e3:.2f} "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_frac']:.2f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import sys
+
+    suffix = "_opt" if "--opt" in sys.argv else ""
+    print(f"## Dry-run{suffix} (single-pod 16x16 = 256 chips, "
+          "multi-pod 2x16x16 = 512)\n")
+    rows = json.load(open(os.path.join(RESULTS, f"dryrun_compile{suffix}.json")))
+    out = ["| arch | shape | mesh | peak GiB/dev | args GiB/dev | compile s | ok |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("ok"):
+            m = r["memory"]
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {gib(m['peak_bytes'])} "
+                f"| {gib(m['argument_bytes'])} | {r['compile_s']} | OK |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - "
+                       f"| FAIL: {r['error'][:60]} |")
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    out.append(f"\n**{n_ok}/{len(rows)} cells compile**.")
+    print("\n".join(out))
+
+    rl = os.path.join(RESULTS, f"dryrun_roofline{suffix}.json")
+    if os.path.exists(rl):
+        print(f"\n## Roofline{suffix} (single-pod, v5e: 197 TF/s bf16, "
+              "819 GB/s HBM, 3x50 GB/s ICI)\n")
+        rows = json.load(open(rl))
+        mem = json.load(open(os.path.join(RESULTS, f"dryrun_compile{suffix}.json")))
+        table = analyze(rows, mem)
+        out = ["| arch | shape | compute ms | memory ms | collective ms | dominant "
+               "| step ms | useful (6ND/HLO) | roofline frac |",
+               "|---|---|---|---|---|---|---|---|---|"]
+        for t in table:
+            if not t["ok"]:
+                out.append(f"| {t['arch']} | {t['shape']} | FAIL | | | | | | |")
+                continue
+            out.append(
+                f"| {t['arch']} | {t['shape']} | {t['compute_s']*1e3:.2f} "
+                f"| {t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} "
+                f"| **{t['dominant']}** | {t['step_s']*1e3:.2f} "
+                f"| {t['useful_ratio']:.2f} | {t['roofline_frac']:.2f} |")
+        print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""§Roofline — the three-term analysis per (arch x shape) cell on the
+single-pod mesh, from the dry-run artifacts (deliverable g).
+
+  compute    = HLO_FLOPs/device       / 197e12 FLOP/s
+  memory     = HLO_bytes/device       / 819e9  B/s
+  collective = coll_bytes/device      / (3 links x 50e9 B/s)
+
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) and the useful-compute ratio.
+Reads results/dryrun_roofline.json (+ memory from results/dryrun_compile.json).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, get_shape
+
+PEAK_FLOPS = 197e12
+HBM_BPS = 819e9
+ICI_BPS = 50e9
+ICI_LINKS = 3  # v5e: 3 usable link-pairs per chip on a 2D torus
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D for train (fwd+bwd), 2*N*D for prefill, 2*N*D_token for decode.
+
+    N excludes the input embedding table (a lookup, not a matmul); the tied
+    or untied LM head IS counted (it is a per-token matmul). For enc-dec the
+    token count is S/2 (both stacks see S/2 tokens/frames each)."""
+    cfg = ARCHS[arch]
+    shape = get_shape(shape_name)
+    n = cfg.num_active_params()
+    if not cfg.tie_embeddings:
+        n -= cfg.padded_vocab * cfg.d_model  # input embedding lookup
+    seq = shape.seq_len // 2 if cfg.is_encoder_decoder else shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * seq
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * seq
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(rows: List[Dict], mem_rows: Optional[List[Dict]] = None) -> List[Dict]:
+    mem_by_cell = {}
+    for m in mem_rows or []:
+        if m.get("ok") and m.get("mesh") == "16x16":
+            mem_by_cell[(m["arch"], m["shape"])] = m["memory"]
+    out = []
+    for r in rows:
+        if not r.get("ok"):
+            out.append({"arch": r["arch"], "shape": r["shape"], "ok": False,
+                        "error": r.get("error")})
+            continue
+        chips = r["chips"]
+        t_comp = r["flops"] / PEAK_FLOPS  # per-device cost_analysis is local
+        t_mem = r["bytes"] / HBM_BPS
+        t_coll = r["coll_total"] / (ICI_LINKS * ICI_BPS)
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_global = r["flops"] * chips
+        out.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "ok": True,
+            "compute_s": t_comp,
+            "memory_s": t_mem,
+            "collective_s": t_coll,
+            "dominant": dom,
+            "step_s": max(terms.values()),
+            "model_flops": mf,
+            "hlo_flops_global": hlo_global,
+            "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+            "roofline_frac": (
+                t_comp / max(terms.values()) if max(terms.values()) else 0.0
+            ),
+            "peak_bytes": (mem_by_cell.get((r["arch"], r["shape"]), {}) or {}).get("peak_bytes"),
+        })
+    return out
+
+
+def _print_table(tag: str, suffix: str) -> None:
+    path = os.path.join(RESULTS, f"dryrun_roofline{suffix}.json")
+    cpath = os.path.join(RESULTS, f"dryrun_compile{suffix}.json")
+    if not os.path.exists(path):
+        print(f"{tag}/missing,0.0,run `python -m repro.launch.dryrun --all "
+              "--mode roofline` first")
+        return
+    rows = json.load(open(path))
+    mem_rows = json.load(open(cpath)) if os.path.exists(cpath) else []
+    table = analyze(rows, mem_rows)
+    for t in table:
+        if not t["ok"]:
+            print(f"{tag}/{t['arch']}:{t['shape']},0.0,FAILED {t['error']}")
+            continue
+        print(
+            f"{tag}/{t['arch']}:{t['shape']},{t['step_s'] * 1e6:.1f},"
+            f"dom={t['dominant']} comp={t['compute_s'] * 1e3:.2f}ms "
+            f"mem={t['memory_s'] * 1e3:.2f}ms coll={t['collective_s'] * 1e3:.2f}ms "
+            f"useful={t['useful_ratio']:.2f} frac={t['roofline_frac']:.2f}"
+        )
+
+
+def main() -> None:
+    _print_table("roofline_baseline", "")  # paper-faithful arm
+    _print_table("roofline_optimized", "_opt")  # post-§Perf arm
+
+
+if __name__ == "__main__":
+    main()

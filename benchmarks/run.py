@@ -1,0 +1,44 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig09_ppo_throughput,
+        fig10_grpo_throughput,
+        fig11_scalability,
+        fig12_max_batch,
+        fig13_long_context,
+        fig14_convergence,
+        roofline,
+    )
+
+    print("name,us_per_call,derived")
+    sections = [
+        ("fig09", fig09_ppo_throughput.main),
+        ("fig10", fig10_grpo_throughput.main),
+        ("fig11", fig11_scalability.main),
+        ("fig12", fig12_max_batch.main),
+        ("fig13", fig13_long_context.main),
+        ("fig14", fig14_convergence.main),
+        ("roofline", roofline.main),
+    ]
+    failed = []
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception as e:  # noqa
+            failed.append(name)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""DistFlow-JAX: fully-distributed RL post-training framework.
+
+Paper: "DistFlow: A Fully Distributed RL Framework for Scalable and
+Efficient LLM Post-Training" (Wang et al., 2025). See DESIGN.md.
+"""

@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    ALL_SHAPES,
+    SHAPES_BY_NAME,
+    applicable_shapes,
+    reduced,
+)
+from repro.configs.registry import ARCHS, ASSIGNED, get_config, get_shape, all_cells

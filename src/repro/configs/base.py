@@ -1,0 +1,261 @@
+"""Model / mesh / RL configuration dataclasses.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`. The config
+is a *pure description*: layer-kind layout, head counts, MoE/SSM settings.
+Model code (``repro.models``) interprets it; sharding rules
+(``repro.distributed.sharding``) derive PartitionSpecs from it; the launcher
+selects it via ``--arch <id>`` through :mod:`repro.configs.registry`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+VOCAB_ALIGN = 256  # pad vocab to multiples of this (16-way TP x 16 MXU lanes)
+
+
+def pad_to(x: int, align: int) -> int:
+    return ((x + align - 1) // align) * align
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Unified architecture description covering dense / MoE / SSM / hybrid /
+    enc-dec / VLM families."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int  # raw (pre-padding) vocabulary size
+
+    # --- MLP / norm flavour ---
+    mlp_type: str = "swiglu"  # swiglu | geglu | relu2 | gelu
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    use_bias: bool = False
+    parallel_block: bool = False  # command-r style parallel attn+mlp residual
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma: scale embeddings by sqrt(d_model)
+
+    # --- attention ---
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None  # mixtral SWA
+    # Layer-kind layout for hybrid archs. attn_layer_period==0 -> all layers
+    # attention (dense); period p with offset o -> layer i is attention iff
+    # i % p == o, otherwise the SSM mixer.
+    attn_layer_period: int = 0
+    attn_layer_offset: int = 0
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_layer_period: int = 1  # layer i is MoE iff i % period == offset
+    moe_layer_offset: int = 0
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_ngroups: int = 1
+
+    # --- enc-dec (seamless) ---
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_len: int = 4096  # encoder memory length used by decode shapes
+
+    # --- modality frontend stubs ---
+    # Number of prefix embedding slots supplied pre-computed by input_specs()
+    # (ViT patches for VLM, audio frames for audio archs). 0 = pure text.
+    num_prefix_embeds: int = 0
+
+    # --- numerics / layout ---
+    dtype: str = "bfloat16"
+    # int8 KV cache (per-slot-per-head scales): halves decode-cache HBM; the
+    # Pallas decode kernel dequantizes per tile in VMEM (the jnp ref path
+    # dequantizes up front — correctness-equivalent, no byte saving on CPU)
+    kv_quant: bool = False
+    # Pad num_heads up to a multiple of this so attention stays TP-shardable
+    # (16-way model axis). Reduced smoke configs set 1.
+    pad_heads_to: int = 16
+    # Sub-quadratic? (SSM/hybrid state, or bounded SWA window.) Drives the
+    # long_500k applicability rule.
+    subquadratic: bool = False
+
+    # ------------------------------------------------------------------ #
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to(self.vocab_size, VOCAB_ALIGN)
+
+    @property
+    def padded_heads(self) -> int:
+        return pad_to(self.num_heads, self.pad_heads_to)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        if self.ssm_state == 0:
+            return 0
+        return self.ssm_d_inner // self.ssm_headdim
+
+    # layer-kind helpers ------------------------------------------------ #
+    def is_attn_layer(self, i: int) -> bool:
+        if self.ssm_state == 0:
+            return True
+        if self.attn_layer_period == 0:
+            return False  # pure SSM
+        return i % self.attn_layer_period == self.attn_layer_offset
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.num_experts == 0:
+            return False
+        return i % self.moe_layer_period == self.moe_layer_offset
+
+    def has_mlp(self) -> bool:
+        """Pure Mamba2 blocks carry no separate MLP (d_ff == 0)."""
+        return self.d_ff > 0
+
+    def layer_kinds(self) -> Tuple[Tuple[str, str], ...]:
+        """((mixer_kind, mlp_kind), ...) per layer.
+
+        mixer_kind in {attn, ssm}; mlp_kind in {dense, moe, none}.
+        """
+        out = []
+        for i in range(self.num_layers):
+            mixer = "attn" if self.is_attn_layer(i) else "ssm"
+            if not self.has_mlp():
+                mlp = "none"
+            elif self.is_moe_layer(i):
+                mlp = "moe"
+            else:
+                mlp = "dense"
+            out.append((mixer, mlp))
+        return tuple(out)
+
+    def num_params(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6 N D)."""
+        d, v = self.d_model, self.padded_vocab
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += d * v  # lm head
+        kinds = self.layer_kinds()
+        hp = self.padded_heads
+        for mixer, mlp in kinds:
+            if mixer == "attn":
+                total += d * hp * self.head_dim  # W_q
+                total += 2 * d * self.num_kv_heads * self.head_dim  # W_k, W_v
+                total += hp * self.head_dim * d  # W_o
+            else:  # ssm
+                din, g, ds, nh = (
+                    self.ssm_d_inner,
+                    self.ssm_ngroups,
+                    self.ssm_state,
+                    self.ssm_nheads,
+                )
+                total += d * (2 * din + 2 * g * ds + nh)  # in_proj (z,x,B,C,dt)
+                total += (din + 2 * g * ds) * self.ssm_conv  # conv
+                total += 3 * nh + din  # A, D, dt_bias, gated-norm
+                total += din * d  # out_proj
+            if mlp == "dense":
+                gated = self.mlp_type in ("swiglu", "geglu")
+                total += d * self.d_ff * (3 if gated else 2)
+            elif mlp == "moe":
+                gated = self.mlp_type in ("swiglu", "geglu")
+                total += self.num_experts * d * self.d_ff * (3 if gated else 2)
+                total += d * self.num_experts  # router
+            total += 2 * d  # two norms (approx; parallel block shares one)
+        if self.is_encoder_decoder:
+            # encoder layers: self-attn + mlp; decoder already counted above,
+            # add cross-attention per decoder layer.
+            for _ in range(self.num_encoder_layers):
+                total += 2 * d * hp * self.head_dim + 2 * d * self.num_kv_heads * self.head_dim
+                gated = self.mlp_type in ("swiglu", "geglu")
+                total += d * self.d_ff * (3 if gated else 2) + 2 * d
+            total += self.num_layers * (
+                d * hp * self.head_dim * 2
+                + 2 * d * self.num_kv_heads * self.head_dim
+            )  # cross-attn q,o,k,v
+        return int(total)
+
+    def num_active_params(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if self.num_experts == 0:
+            return self.num_params()
+        total = self.num_params()
+        gated = self.mlp_type in ("swiglu", "geglu")
+        per_expert = self.d_model * self.d_ff * (3 if gated else 2)
+        n_moe = sum(1 for i in range(self.num_layers) if self.is_moe_layer(i))
+        inactive = n_moe * (self.num_experts - self.num_experts_per_tok) * per_expert
+        return int(total - inactive)
+
+
+# --------------------------------------------------------------------------- #
+# Input shapes (assigned): every LM arch carries the same four shape cells.
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def applicable_shapes(cfg: ModelConfig) -> Tuple[ShapeConfig, ...]:
+    """The assigned shape cells applicable to ``cfg``.
+
+    - ``long_500k`` only for sub-quadratic archs (SSM / hybrid / SWA).
+    - encoder-only archs would skip decode shapes (none assigned here;
+      seamless is enc-dec, so decode applies to its decoder).
+    """
+    shapes = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.subquadratic:
+        shapes.append(LONG_500K)
+    return tuple(shapes)
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    base = dict(
+        num_layers=max(2, min(4, cfg.num_layers)),
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2),
+        head_dim=16,
+        d_ff=128 if cfg.d_ff > 0 else 0,
+        vocab_size=256,
+        pad_heads_to=1,
+        sliding_window=16 if cfg.sliding_window else None,
+        num_experts=min(cfg.num_experts, 4),
+        num_experts_per_tok=min(cfg.num_experts_per_tok, 2),
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_headdim=16 if cfg.ssm_state else 64,
+        num_encoder_layers=2 if cfg.is_encoder_decoder else 0,
+        encoder_len=32,
+        num_prefix_embeds=8 if cfg.num_prefix_embeds else 0,
+        name=cfg.name + "-smoke",
+    )
+    # keep layer-layout periods valid for the reduced depth
+    if cfg.attn_layer_period:
+        base["attn_layer_period"] = 4
+        base["attn_layer_offset"] = 1
+        base["num_layers"] = 4
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)

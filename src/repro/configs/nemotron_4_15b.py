@@ -1,0 +1,22 @@
+"""nemotron-4-15b — dense, GQA, squared-ReLU MLP.
+
+[dense] 32L d_model=6144 48H (GQA kv=8) d_ff=24576 vocab=256000
+[arXiv:2402.16819; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    num_layers=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24_576,
+    vocab_size=256_000,
+    norm_type="layernorm",
+    mlp_type="relu2",  # squared ReLU, non-gated
+    rope_theta=10_000.0,
+    subquadratic=False,
+)

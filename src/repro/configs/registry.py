@@ -1,0 +1,64 @@
+"""``--arch <id>`` registry over the assigned architectures (+ paper's own)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES_BY_NAME, applicable_shapes, reduced
+
+from repro.configs.mamba2_2_7b import CONFIG as MAMBA2_2_7B
+from repro.configs.jamba_52b import CONFIG as JAMBA_52B
+from repro.configs.seamless_m4t_medium import CONFIG as SEAMLESS_M4T_MEDIUM
+from repro.configs.nemotron_4_15b import CONFIG as NEMOTRON_4_15B
+from repro.configs.gemma_2b import CONFIG as GEMMA_2B
+from repro.configs.deepseek_67b import CONFIG as DEEPSEEK_67B
+from repro.configs.command_r_plus_104b import CONFIG as COMMAND_R_PLUS_104B
+from repro.configs.granite_moe_3b import CONFIG as GRANITE_MOE_3B
+from repro.configs.mixtral_8x7b import CONFIG as MIXTRAL_8X7B
+from repro.configs.llava_next_34b import CONFIG as LLAVA_NEXT_34B
+from repro.configs.qwen2_5_7b import CONFIG as QWEN2_5_7B
+
+ARCHS: Dict[str, ModelConfig] = {
+    "mamba2-2.7b": MAMBA2_2_7B,
+    "jamba-v0.1-52b": JAMBA_52B,
+    "seamless-m4t-medium": SEAMLESS_M4T_MEDIUM,
+    "nemotron-4-15b": NEMOTRON_4_15B,
+    "gemma-2b": GEMMA_2B,
+    "deepseek-67b": DEEPSEEK_67B,
+    "command-r-plus-104b": COMMAND_R_PLUS_104B,
+    "granite-moe-3b-a800m": GRANITE_MOE_3B,
+    "mixtral-8x7b": MIXTRAL_8X7B,
+    "llava-next-34b": LLAVA_NEXT_34B,
+    # the paper's own model family (not part of the assigned 10):
+    "qwen2.5-7b": QWEN2_5_7B,
+}
+
+ASSIGNED = tuple(k for k in ARCHS if k != "qwen2.5-7b")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES_BY_NAME[name]
+
+
+def all_cells():
+    """Every applicable (arch, shape) dry-run cell."""
+    for arch in ASSIGNED:
+        cfg = ARCHS[arch]
+        for shape in applicable_shapes(cfg):
+            yield arch, shape.name
+
+
+__all__ = [
+    "ARCHS",
+    "ASSIGNED",
+    "get_config",
+    "get_shape",
+    "all_cells",
+    "applicable_shapes",
+    "reduced",
+]

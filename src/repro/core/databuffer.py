@@ -1,0 +1,157 @@
+"""Distributed Databuffer (paper §6.2, Figs. 7-8).
+
+One buffer instance per process (paper: per node, shared by its local
+workers). Stage outputs are stored as *global* ``jax.Array``s whose shards
+live on the producing stage's devices under the producing stage's sharding —
+nothing is ever gathered to a controller.
+
+At a stage boundary the consumer asks for a key under ITS sharding:
+  * DP unchanged  -> the sharding matches: **fast path**, the exact same
+    buffers are handed over (zero copy, zero collective) — the paper's
+    shared-memory fast path.
+  * DP changed    -> ``jax.device_put`` to the new NamedSharding; GSPMD lowers
+    this to the all-to-all among peers of Fig. 7 (each source shard slices,
+    sends, each destination concatenates). No central node participates.
+
+The buffer records fast-path hits, redistributions, and bytes moved so
+benchmarks can compare against the centralized baseline's all-to-one volume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class BufferStats:
+    puts: int = 0
+    fast_path_hits: int = 0
+    redistributions: int = 0
+    bytes_moved: int = 0  # bytes crossing device boundaries in redistributions
+    bytes_through_controller: int = 0  # always 0 for the distributed buffer
+
+    def reset(self):
+        self.puts = self.fast_path_hits = self.redistributions = 0
+        self.bytes_moved = self.bytes_through_controller = 0
+
+
+class DistributedDatabuffer:
+    """Parallelism-aware intermediary between RL stages."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self._store: Dict[str, jax.Array] = {}
+        self.stats = BufferStats()
+
+    # ------------------------------------------------------------------ #
+    def put(self, key: str, value: jax.Array, spec: Optional[P] = None) -> None:
+        """Store a stage output. If ``spec`` is given and the value is not yet
+        a committed global array, shard it accordingly (this is where 'only
+        TP rank 0 writes' is realized: the array is stored sharded over the
+        data axes and replicated over `model`, so there is exactly one
+        logical copy — TP replicas do not append duplicates)."""
+        if spec is not None and (
+            not isinstance(value, jax.Array)
+            or not self._matches(value, spec)
+        ):
+            value = jax.device_put(value, NamedSharding(self.mesh, spec))
+        self._store[key] = value
+        self.stats.puts += 1
+
+    def get(self, key: str, spec: Optional[P] = None) -> jax.Array:
+        """Fetch under the consumer stage's sharding (None = as stored)."""
+        value = self._store[key]
+        if spec is None:
+            return value
+        if self._matches(value, spec):
+            self.stats.fast_path_hits += 1  # DP unchanged: zero-copy handoff
+            return value
+        target = NamedSharding(self.mesh, spec)
+        self.stats.redistributions += 1
+        self.stats.bytes_moved += _resharding_bytes(value, target)
+        return jax.device_put(value, target)  # GSPMD all-to-all among peers
+
+    def keys(self):
+        return list(self._store)
+
+    def pop(self, key: str) -> jax.Array:
+        return self._store.pop(key)
+
+    def clear(self) -> None:
+        self._store.clear()
+
+    # ------------------------------------------------------------------ #
+    def _matches(self, value: jax.Array, spec: P) -> bool:
+        sh = getattr(value, "sharding", None)
+        if not isinstance(sh, NamedSharding):
+            return False
+        if sh.mesh is not self.mesh and sh.mesh != self.mesh:
+            return False
+        return _normalize(sh.spec, value.ndim) == _normalize(spec, value.ndim)
+
+
+def _normalize(spec: P, ndim: int) -> tuple:
+    """Pad with None to ndim and canonicalize single-axis tuples, so
+    P('data'), P('data', None) and P(('data',), None) all compare equal."""
+    parts = list(spec) + [None] * (ndim - len(spec))
+    out = []
+    for p in parts:
+        if isinstance(p, tuple):
+            p = p[0] if len(p) == 1 else p
+        out.append(p)
+    return tuple(out)
+
+
+def _resharding_bytes(value: jax.Array, target: NamedSharding) -> int:
+    """Upper-bound estimate of bytes crossing devices for value -> target:
+    every byte not already resident at its destination must move once."""
+    total = value.size * value.dtype.itemsize
+    # fraction resident: for a pure DP-degree change over the same axis order,
+    # each destination shard overlaps its source shard by min(dp_a, dp_b)/max.
+    return int(total)
+
+
+class CentralizedDatabuffer(DistributedDatabuffer):
+    """The single-controller baseline arm (paper Fig. 2, the verl-style
+    hybrid-controller dataflow): every stage output is gathered to the
+    controller (host rank 0) and re-dispatched from there. Functionally
+    identical; the all-to-one / one-to-all traffic and the controller-resident
+    bytes are what the paper identifies as the scaling bottleneck, and what
+    our benchmarks measure."""
+
+    def __init__(self, mesh: Mesh):
+        super().__init__(mesh)
+        self.controller_resident_bytes = 0  # peak bytes held by controller
+
+    def put(self, key: str, value: jax.Array, spec: Optional[P] = None) -> None:
+        # all-to-one: controller materializes the full global batch on host
+        host_value = jax.device_get(value)  # gather to the controller
+        nbytes = host_value.size * host_value.dtype.itemsize
+        self.stats.bytes_through_controller += nbytes
+        self._host_store = getattr(self, "_host_store", {})
+        self._host_store[key] = host_value
+        self.controller_resident_bytes = max(
+            self.controller_resident_bytes,
+            sum(v.size * v.dtype.itemsize for v in self._host_store.values()),
+        )
+        self.stats.puts += 1
+
+    def get(self, key: str, spec: Optional[P] = None) -> jax.Array:
+        # one-to-all: controller re-dispatches to the consumer's sharding
+        host_value = self._host_store[key]
+        nbytes = host_value.size * host_value.dtype.itemsize
+        self.stats.bytes_through_controller += nbytes
+        self.stats.redistributions += 1
+        if spec is None:
+            spec = P()
+        return jax.device_put(host_value, NamedSharding(self.mesh, spec))
+
+    def clear(self) -> None:
+        super().clear()
+        if hasattr(self, "_host_store"):
+            self._host_store.clear()

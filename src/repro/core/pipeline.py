@@ -1,0 +1,189 @@
+"""Built-in RL pipelines (paper Fig. 1) + the end-to-end driver.
+
+``build_pipeline`` wires together every subsystem: model init, jitted engines,
+the DAG (built-in PPO/GRPO or user-supplied), the planner's serialized chain,
+the Data Coordinator (Distributed Dataloader + Databuffer), and a DAG Worker.
+``centralized=True`` swaps in the single-controller databuffer — the baseline
+arm for the paper's comparisons.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.core.dag import DAG, Node, NodeType, Role
+from repro.core.databuffer import CentralizedDatabuffer, DistributedDatabuffer
+from repro.core.planner import DAGPlanner
+from repro.core.registry import Registry, default_registry
+from repro.core.worker import DAGWorker, WorkerContext
+from repro.data.dataloader import DistributedDataloader
+from repro.data.dataset import SyntheticMathDataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import get_model
+from repro.rl import advantage as adv_mod
+from repro.rl import critic as critic_mod
+from repro.rl import reward as reward_mod
+from repro.rl import rollout as rollout_mod
+from repro.rl import trainer
+from repro.rl.trainer import RLConfig
+
+
+# --------------------------------------------------------------------------- #
+# built-in DAGs (paper Fig. 1)
+# --------------------------------------------------------------------------- #
+def grpo_dag() -> DAG:
+    return DAG.from_nodes(
+        [
+            Node("actor_generation", Role.ACTOR, NodeType.GENERATE),
+            Node("reference_inference", Role.REFERENCE, NodeType.MODEL_INFERENCE,
+                 deps=("actor_generation",)),
+            Node("reward_compute", Role.REWARD, NodeType.COMPUTE,
+                 deps=("actor_generation",)),
+            Node("advantage_compute", Role.ADVANTAGE, NodeType.COMPUTE,
+                 deps=("reward_compute",)),
+            Node("actor_train", Role.ACTOR, NodeType.MODEL_TRAIN,
+                 deps=("reference_inference", "advantage_compute")),
+        ]
+    )
+
+
+def ppo_dag() -> DAG:
+    return DAG.from_nodes(
+        [
+            Node("actor_generation", Role.ACTOR, NodeType.GENERATE),
+            Node("reference_inference", Role.REFERENCE, NodeType.MODEL_INFERENCE,
+                 deps=("actor_generation",)),
+            Node("reward_compute", Role.REWARD, NodeType.COMPUTE,
+                 deps=("actor_generation",)),
+            Node("critic_inference", Role.CRITIC, NodeType.MODEL_INFERENCE,
+                 deps=("actor_generation",)),
+            Node("advantage_compute", Role.ADVANTAGE, NodeType.COMPUTE,
+                 deps=("reward_compute", "critic_inference",
+                       "reference_inference")),
+            Node("actor_train", Role.ACTOR, NodeType.MODEL_TRAIN,
+                 deps=("advantage_compute",)),
+            Node("critic_train", Role.CRITIC, NodeType.MODEL_TRAIN,
+                 deps=("advantage_compute",)),
+        ]
+    )
+
+
+# --------------------------------------------------------------------------- #
+def _build_engines(model, cfg: ModelConfig, rl: RLConfig, tok: ByteTokenizer):
+    eng: Dict[str, Any] = {}
+
+    def _generate(params, prompts, key):
+        return rollout_mod.generate(
+            model, params, prompts, key,
+            max_new=rl.max_new_tokens, temperature=rl.temperature,
+            eos_id=tok.eos_id, pad_id=tok.pad_id,
+        )
+
+    eng["generate"] = jax.jit(_generate)
+    eng["logprobs"] = jax.jit(lambda p, t: model.logprobs(p, t))
+    eng["reward"] = jax.jit(
+        lambda tokens, mask, answers: reward_mod.math_reward_tokens(
+            tokens, mask, answers, tok
+        )
+    )
+    if rl.algorithm == "grpo":
+        eng["advantage"] = jax.jit(
+            lambda rewards, mask: adv_mod.grpo(rewards, mask, group_size=rl.group_size)
+        )
+    else:
+        def _ppo_adv(rewards, mask, old_lp, ref_lp, values):
+            B, T = mask.shape
+            kl = old_lp - ref_lp  # per-token KL estimate (k1)
+            m = mask.astype(jnp.float32)
+            # terminal reward at the last response token
+            last = jnp.maximum(jnp.sum(m, axis=1) - 1, 0).astype(jnp.int32)
+            first = jnp.argmax(mask, axis=1)
+            pos = jnp.clip(first + last, 0, T - 1)
+            tok_rewards = -rl.kl_coef * kl * m
+            tok_rewards = tok_rewards.at[jnp.arange(B), pos].add(rewards)
+            adv, ret = adv_mod.gae(
+                tok_rewards, values * m, m, gamma=rl.gamma, lam=rl.gae_lambda
+            )
+            return adv_mod.whiten(adv, m), ret
+
+        eng["advantage"] = jax.jit(_ppo_adv)
+        eng["values"] = jax.jit(
+            lambda p, t: critic_mod.values_fn(model.cfg, p, t)
+        )
+        eng["critic_step"] = jax.jit(trainer.make_critic_step(model.cfg, rl))
+    eng["actor_step"] = jax.jit(trainer.make_actor_step(model, rl))
+    return eng
+
+
+@dataclasses.dataclass
+class Pipeline:
+    worker: DAGWorker
+    ctx: WorkerContext
+    buffer: DistributedDatabuffer
+    dag: DAG
+    plan: Any
+
+    def run(self, iterations: int):
+        history = []
+        for _ in range(iterations):
+            history.append(self.worker.run_iteration())
+        return history
+
+
+def build_pipeline(
+    cfg: ModelConfig,
+    rl: RLConfig,
+    *,
+    mesh: Optional[Mesh] = None,
+    dag: Optional[DAG] = None,
+    dataset=None,
+    prompts_per_iter: int = 8,
+    centralized: bool = False,
+    registry: Optional[Registry] = None,
+    seed: int = 0,
+) -> Pipeline:
+    if mesh is None:
+        mesh = jax.make_mesh(
+            (1, 1), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+    tok = ByteTokenizer()
+    assert cfg.vocab_size >= tok.vocab_size, "model vocab must cover the tokenizer"
+    model = get_model(cfg)
+
+    key = jax.random.PRNGKey(seed)
+    k_actor, k_critic, k_run = jax.random.split(key, 3)
+    actor_params = model.init(k_actor)
+    ref_params = jax.tree.map(jnp.copy, actor_params)  # frozen reference
+
+    ctx = WorkerContext(
+        mesh=mesh,
+        rl=rl,
+        engines=_build_engines(model, cfg, rl, tok),
+        dataloader=DistributedDataloader(
+            dataset or SyntheticMathDataset(4096, seed=seed),
+            mesh=mesh,
+            global_batch=prompts_per_iter,
+            seed=seed,
+        ),
+        actor_state=trainer.init_state(actor_params),
+        ref_params=ref_params,
+        tokenizer=tok,
+        key=k_run,
+    )
+    if rl.algorithm == "ppo":
+        ctx.critic_state = trainer.init_state(critic_mod.init(cfg, k_critic))
+
+    dag = dag or (grpo_dag() if rl.algorithm == "grpo" else ppo_dag())
+    plan = DAGPlanner().plan(dag)
+    buffer_cls = CentralizedDatabuffer if centralized else DistributedDatabuffer
+    buffer = buffer_cls(mesh)
+    worker = DAGWorker(ctx, plan, registry or default_registry(), buffer)
+    return Pipeline(worker=worker, ctx=ctx, buffer=buffer, dag=dag, plan=plan)

@@ -1,0 +1,62 @@
+"""(Role, Type) -> execution-function registry (paper §5, Fig. 5).
+
+The DAG Worker binds each node to its computational function through this
+table at initialization. Researchers extend the pipeline by registering a new
+function for a (role, type) key — or overriding a built-in — without touching
+the surrounding dataflow (the paper's pluggability story).
+
+Every stage function has the uniform signature::
+
+    fn(ctx: WorkerContext, buffer: DistributedDatabuffer, node: Node) -> dict
+
+reading its inputs from / writing its outputs to the databuffer under the
+node's stage sharding.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.core.dag import Node, NodeType, Role
+
+StageFn = Callable[..., Dict]
+
+
+class Registry:
+    def __init__(self):
+        self._fns: Dict[Tuple[Role, NodeType], StageFn] = {}
+
+    def register(self, role: Role, type_: NodeType, fn: StageFn, *, override=False):
+        key = (role, type_)
+        if key in self._fns and not override:
+            raise KeyError(f"{key} already registered (pass override=True)")
+        self._fns[key] = fn
+        return fn
+
+    def resolve(self, node: Node) -> StageFn:
+        try:
+            return self._fns[node.fn_key]
+        except KeyError:
+            raise KeyError(
+                f"no function registered for node {node.node_id!r} "
+                f"with (role={node.role}, type={node.type})"
+            ) from None
+
+    def keys(self):
+        return list(self._fns)
+
+
+def default_registry() -> Registry:
+    """The built-in PPO/GRPO function table (lazily imported to avoid
+    circular deps)."""
+    from repro.core import stages
+
+    r = Registry()
+    r.register(Role.ACTOR, NodeType.GENERATE, stages.actor_generate)
+    r.register(Role.ACTOR, NodeType.MODEL_INFERENCE, stages.actor_logprobs)
+    r.register(Role.REFERENCE, NodeType.MODEL_INFERENCE, stages.reference_logprobs)
+    r.register(Role.CRITIC, NodeType.MODEL_INFERENCE, stages.critic_values)
+    r.register(Role.REWARD, NodeType.COMPUTE, stages.reward_compute)
+    r.register(Role.ADVANTAGE, NodeType.COMPUTE, stages.advantage_compute)
+    r.register(Role.ACTOR, NodeType.MODEL_TRAIN, stages.actor_train)
+    r.register(Role.CRITIC, NodeType.MODEL_TRAIN, stages.critic_train)
+    return r

@@ -1,0 +1,143 @@
+"""Built-in stage functions — the bodies behind the Fig. 5 dispatch table.
+
+Stage shardings realize the paper's per-stage parallelism: model-bound stages
+(generate / inference / train) shard the batch over the `data` axes only (the
+`model` axis carries TP), while pure COMPUTE stages (reward, advantage) shard
+the batch over *all* axes — a genuinely different DP size, so the
+Distributed Databuffer's redistribution path (Figs. 7-8) is exercised at
+every model<->compute boundary exactly as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dag import Node
+from repro.rl import advantage as adv_mod
+
+
+def _specs(ctx):
+    """(model-stage batch spec, compute-stage batch spec) for ctx.mesh."""
+    axes = ctx.mesh.axis_names
+    data_axes = tuple(a for a in axes if a != "model")
+    model_spec = P(data_axes)
+    compute_spec = P(tuple(axes))
+    return model_spec, compute_spec
+
+
+# --------------------------------------------------------------------------- #
+def actor_generate(ctx, buffer, node: Node) -> Dict:
+    """(ACTOR, GENERATE): pull a prompt shard from the Distributed Dataloader,
+    roll out group_size responses per prompt, store the trajectory."""
+    model_spec, _ = _specs(ctx)
+    batch = ctx.dataloader.next_batch()
+    prompts, answers = batch["prompts"], batch["answers"]
+    g = ctx.rl.group_size if ctx.rl.algorithm == "grpo" else 1
+    if g > 1:
+        prompts = jnp.repeat(prompts, g, axis=0)
+        answers = jnp.repeat(answers, g, axis=0)
+    key = ctx.next_key()
+    res = ctx.engines["generate"](ctx.actor_state.params, prompts, key)
+    buffer.put("tokens", res.tokens, model_spec)
+    buffer.put("response_mask", res.response_mask, model_spec)
+    buffer.put("old_logprob", res.old_logprob, model_spec)
+    buffer.put("answers", answers, model_spec)
+    gen_tokens = float(jnp.sum(res.lengths))
+    ctx.counters["gen_tokens"] = ctx.counters.get("gen_tokens", 0.0) + gen_tokens
+    return {
+        "rollout/mean_len": float(jnp.mean(res.lengths.astype(jnp.float32))),
+        "rollout/tokens": gen_tokens,
+    }
+
+
+def actor_logprobs(ctx, buffer, node: Node) -> Dict:
+    """(ACTOR, MODEL_INFERENCE): recompute behaviour logprobs under the
+    training engine (verl does this because its rollout engine differs from
+    its training engine; ours are exact, so this node is optional and used by
+    custom DAGs to validate engine agreement)."""
+    model_spec, _ = _specs(ctx)
+    tokens = buffer.get("tokens", model_spec)
+    lp, _ = ctx.engines["logprobs"](ctx.actor_state.params, tokens)
+    buffer.put("old_logprob", lp * buffer.get("response_mask", model_spec), model_spec)
+    return {}
+
+
+def reference_logprobs(ctx, buffer, node: Node) -> Dict:
+    model_spec, _ = _specs(ctx)
+    tokens = buffer.get("tokens", model_spec)
+    lp, _ = ctx.engines["logprobs"](ctx.ref_params, tokens)
+    buffer.put("ref_logprob", lp, model_spec)
+    return {}
+
+
+def critic_values(ctx, buffer, node: Node) -> Dict:
+    model_spec, _ = _specs(ctx)
+    tokens = buffer.get("tokens", model_spec)
+    v = ctx.engines["values"](ctx.critic_state.params, tokens)
+    buffer.put("old_values", v, model_spec)
+    return {}
+
+
+def reward_compute(ctx, buffer, node: Node) -> Dict:
+    """(REWARD, COMPUTE): function reward (paper's PPO uses a function reward
+    in place of a reward model). Runs at compute-stage DP (all axes)."""
+    _, compute_spec = _specs(ctx)
+    tokens = buffer.get("tokens", compute_spec)
+    mask = buffer.get("response_mask", compute_spec)
+    answers = buffer.get("answers", P(compute_spec[0]))
+    rewards = ctx.engines["reward"](tokens, mask, answers)
+    buffer.put("rewards", rewards, P(compute_spec[0]))
+    return {"reward/mean": float(jnp.mean(rewards))}
+
+
+def advantage_compute(ctx, buffer, node: Node) -> Dict:
+    _, compute_spec = _specs(ctx)
+    seq_spec = P(compute_spec[0])
+    mask = buffer.get("response_mask", compute_spec)
+    rewards = buffer.get("rewards", seq_spec)
+    if ctx.rl.algorithm == "grpo":
+        adv = ctx.engines["advantage"](rewards, mask)
+        buffer.put("advantages", adv, compute_spec)
+        return {}
+    # PPO: shaped token rewards (terminal + KL penalty) -> GAE
+    old_lp = buffer.get("old_logprob", compute_spec)
+    ref_lp = buffer.get("ref_logprob", compute_spec)
+    values = buffer.get("old_values", compute_spec)
+    adv, ret = ctx.engines["advantage"](rewards, mask, old_lp, ref_lp, values)
+    buffer.put("advantages", adv, compute_spec)
+    buffer.put("returns", ret, compute_spec)
+    return {}
+
+
+def actor_train(ctx, buffer, node: Node) -> Dict:
+    model_spec, _ = _specs(ctx)
+    batch = {
+        "tokens": buffer.get("tokens", model_spec),
+        "response_mask": buffer.get("response_mask", model_spec),
+        "old_logprob": buffer.get("old_logprob", model_spec),
+        "advantages": buffer.get("advantages", model_spec),
+    }
+    if ctx.rl.algorithm == "grpo":
+        if "ref_logprob" in buffer.keys():
+            batch["ref_logprob"] = buffer.get("ref_logprob", model_spec)
+        else:
+            # reference-free DAG variant (custom_dag example): KL term is 0
+            batch["ref_logprob"] = batch["old_logprob"]
+    ctx.actor_state, metrics = ctx.engines["actor_step"](ctx.actor_state, batch)
+    return {f"actor/{k}": float(v) for k, v in metrics.items()}
+
+
+def critic_train(ctx, buffer, node: Node) -> Dict:
+    model_spec, _ = _specs(ctx)
+    batch = {
+        "tokens": buffer.get("tokens", model_spec),
+        "response_mask": buffer.get("response_mask", model_spec),
+        "old_values": buffer.get("old_values", model_spec),
+        "returns": buffer.get("returns", model_spec),
+    }
+    ctx.critic_state, metrics = ctx.engines["critic_step"](ctx.critic_state, batch)
+    return {f"critic/{k}": float(v) for k, v in metrics.items()}

@@ -1,0 +1,74 @@
+"""DAG Worker (paper §5): the per-process controller.
+
+Lifecycle: Initialization (bind functions to nodes via the registry,
+materialize the execution queue) + iterative Execution (walk the chain, the
+databuffer brokering every stage boundary). In JAX SPMD every process runs an
+identical DAGWorker over its own data shard — the multi-controller paradigm;
+there is no coordinator process anywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.databuffer import DistributedDatabuffer
+from repro.core.dag import Node
+from repro.core.planner import ExecutionPlan
+from repro.core.registry import Registry
+
+
+@dataclass
+class WorkerContext:
+    """Everything a stage function may touch. Mutable fields (actor_state,
+    critic_state) are updated in place by train nodes."""
+
+    mesh: Any
+    rl: Any
+    engines: Dict[str, Callable]
+    dataloader: Any
+    actor_state: Any = None
+    critic_state: Any = None
+    ref_params: Any = None
+    tokenizer: Any = None
+    key: Any = None
+    counters: Dict[str, float] = field(default_factory=dict)
+
+    def next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+class DAGWorker:
+    def __init__(
+        self,
+        ctx: WorkerContext,
+        plan: ExecutionPlan,
+        registry: Registry,
+        buffer: DistributedDatabuffer,
+    ):
+        self.ctx = ctx
+        self.plan = plan
+        self.registry = registry
+        self.buffer = buffer
+        # Initialization phase: materialize the execution queue by binding a
+        # concrete function to every node (paper Fig. 5).
+        self.queue: List[tuple] = [
+            (task.node, self.registry.resolve(task.node)) for task in plan.tasks
+        ]
+
+    def run_iteration(self) -> Dict[str, float]:
+        """One RL iteration: execute the serialized chain; the databuffer is
+        the intermediary state manager between nodes."""
+        metrics: Dict[str, float] = {}
+        for node, fn in self.queue:
+            t0 = time.perf_counter()
+            out = fn(self.ctx, self.buffer, node)
+            metrics.update(out or {})
+            metrics[f"time/{node.node_id}"] = time.perf_counter() - t0
+        self.buffer.clear()  # intermediate data is transient (paper §6)
+        return metrics

@@ -1,0 +1,71 @@
+"""Explicit collective helpers (shard_map) for paths where GSPMD's automatic
+choice is not what we want on real hardware.
+
+``seq_sharded_decode_attention`` is the TPU decode path for GQA archs whose
+kv_heads don't divide TP: the KV cache is sequence-sharded over `model`, each
+shard computes partial flash-decode (o, lse) with its absolute position
+offset, and shards combine with the exact log-sum-exp merge. On the CPU
+dry-run the pjit/ref path is used instead (same math, GSPMD-inserted
+collectives).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels import ops
+
+
+def seq_sharded_decode_attention(
+    mesh: Mesh,
+    q: jax.Array,  # (B, H, D) replicated over `model`
+    k: jax.Array,  # (B, S, KVH, D) sequence-sharded over `model`
+    v: jax.Array,
+    cache_len: jax.Array,  # (B,)
+    *,
+    axis: str = "model",
+    window: Optional[int] = None,
+):
+    n = mesh.shape[axis]
+    S = k.shape[1]
+    assert S % n == 0
+    shard_s = S // n
+
+    def body(q, k, v, cache_len):
+        idx = jax.lax.axis_index(axis)
+        # absolute offset of this shard's slot 0
+        o, lse = _offset_decode(q, k, v, cache_len, idx * shard_s, window)
+        o_all = jax.lax.all_gather(o, axis)  # (n, B, H, D)
+        lse_all = jax.lax.all_gather(lse, axis)
+        return ops.combine_decode_shards(o_all, lse_all)
+
+    spec_q = P(None, None, None)
+    spec_kv = P(None, axis, None, None)
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec_q, spec_kv, spec_kv, P(None)),
+        out_specs=spec_q,
+        check_vma=False,  # output replication over `axis` is by construction
+    )(q, k, v, cache_len)
+
+
+def _offset_decode(q, k, v, cache_len, pos_offset, window):
+    # pos_offset is traced (axis_index); the kernel API takes a static int,
+    # so apply the offset by shifting the valid-length comparison instead:
+    # positions in this shard are [pos_offset, pos_offset + S_local).
+    eff_len = jnp.clip(cache_len - pos_offset, 0, k.shape[1])
+    # NOTE: window!=None is unused on this path — SWA archs bound the cache
+    # with a ring buffer (W slots total) instead of sequence-sharding it, so
+    # seq-sharded decode only serves full-attention GQA caches.
+    del window
+    return ops.decode_attention(q, k, v, eff_len)
+
+
+def repartition(mesh: Mesh, x: jax.Array, spec: P) -> jax.Array:
+    """The databuffer's redistribution primitive as a standalone helper."""
+    return jax.device_put(x, NamedSharding(mesh, spec))

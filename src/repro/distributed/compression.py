@@ -1,0 +1,60 @@
+"""Gradient compression for the data-parallel all-reduce (DESIGN.md §9).
+
+``compressed_psum`` replaces an exact psum with: per-block int8 quantize ->
+all_gather(quantized + scales) -> local dequantize-sum. Wire bytes drop to
+~1/4 of fp32 (1/2 of bf16) at the price of quantization noise; an error-
+feedback accumulator (``ef_update``) keeps the bias bounded, which is the
+standard trick that makes low-bit gradient exchange trainable.
+
+Used opt-in by wrapping the grad computation in ``shard_map`` over the data
+axes; the dense pjit path keeps exact reductions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256  # quantization block (per-block scale)
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape, size) -> jax.Array:
+    out = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return out.reshape(shape)
+
+
+def compressed_psum(x: jax.Array, axis) -> jax.Array:
+    """Inside shard_map: int8 all-gather + local dequant-sum over ``axis``."""
+    q, scale = _quantize(x)
+    q_all = jax.lax.all_gather(q, axis)  # (n, blocks, BLOCK) int8
+    s_all = jax.lax.all_gather(scale, axis)
+    total = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)  # (blocks, BLOCK)
+    return total.reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
+
+
+def ef_update(grad: jax.Array, error: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Error feedback: compress (grad + carried error); carry the residual."""
+    target = grad.astype(jnp.float32) + error
+    q, scale = _quantize(target)
+    decoded = _dequantize(q, scale, grad.shape, grad.size)
+    new_error = target - decoded
+    return decoded.astype(grad.dtype), new_error
+
+
+def wire_bytes(x: jax.Array) -> Tuple[int, int]:
+    """(exact fp32 bytes, compressed bytes) for one all-reduce of ``x``."""
+    exact = x.size * 4
+    comp = x.size * 1 + (x.size // BLOCK + 1) * 4
+    return exact, comp

@@ -1,0 +1,70 @@
+"""Train <-> serve weight switching (the colocated-architecture tax).
+
+In a colocated RL framework the SAME actor weights serve two engines with
+different optimal layouts: FSDPxTP for the train stage, TP-resident for the
+generation stage (see sharding.param_specs modes and §Perf cell A). The
+paper's related-work section calls out "optimizing the efficiency of model
+weight switching across different stages" as a core colocated-design cost —
+this module is that switch, measured.
+
+``switch`` is a pure resharding: jax.device_put to the target NamedShardings
+(GSPMD all-gather/all-to-all among peers — no host round-trip, no
+controller). ``switch_bytes`` prices it: moving FSDP-sharded bf16 weights to
+TP-resident costs each device the weights it doesn't yet hold, once per RL
+iteration — amortized over the whole generation stage.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shr
+
+
+def specs_for(cfg: ModelConfig, mesh: Mesh, params, mode: str):
+    return shr.param_specs(cfg, mesh, params, mode=mode)
+
+
+def switch(mesh: Mesh, params, target_specs) -> Any:
+    """Reshard a param pytree to the target stage layout (peer collectives)."""
+    shardings = shr.named(mesh, target_specs)
+    return jax.tree.map(jax.device_put, params, shardings)
+
+
+def switch_bytes(cfg: ModelConfig, mesh: Mesh, params_shape,
+                 src_mode: str = "train", dst_mode: str = "serve") -> dict:
+    """Analytic per-device cost of one train->serve switch: bytes each device
+    must RECEIVE = its destination-resident bytes minus what it already holds
+    under the source layout (overlap lower-bounds to the smaller shard)."""
+    src = shr.param_specs(cfg, mesh, params_shape, mode=src_mode)
+    dst = shr.param_specs(cfg, mesh, params_shape, mode=dst_mode)
+    sizes = dict(mesh.shape)
+
+    def shard_frac(spec, shape):
+        n = 1
+        for dim, entry in zip(shape, tuple(spec) + (None,) * 8):
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                if a is not None:
+                    n *= sizes[a]
+        return 1.0 / n
+
+    recv = total_dst = 0.0
+    for (leaf, s_spec, d_spec) in zip(
+        jax.tree.leaves(params_shape),
+        jax.tree.leaves(src, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.leaves(dst, is_leaf=lambda x: isinstance(x, P)),
+    ):
+        nbytes = leaf.size * leaf.dtype.itemsize
+        f_src = shard_frac(s_spec, leaf.shape)
+        f_dst = shard_frac(d_spec, leaf.shape)
+        total_dst += nbytes * f_dst
+        recv += nbytes * max(f_dst - min(f_src, f_dst), 0.0)
+    return {
+        "recv_bytes_per_device": recv,
+        "resident_bytes_per_device_dst": total_dst,
+        # ICI seconds (3 links x 50 GB/s), amortized once per RL iteration
+        "switch_seconds": recv / 150e9,
+    }

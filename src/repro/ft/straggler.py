@@ -1,0 +1,70 @@
+"""Straggler mitigation: work-stealing re-partition of dataloader shards.
+
+The paper (§2.2) identifies rollout long-tails as the dominant utilization
+loss. Two mitigations here:
+
+1. **Max-len bounding** (structural): the rollout engine decodes fixed-size
+   token slabs, so a single long sample cannot extend an iteration beyond
+   max_new_tokens — the iteration-time distribution is bounded by design.
+2. **Shard rebalancing** (reactive): between iterations, per-host step times
+   are compared; hosts slower than ``threshold`` x median (or dead hosts,
+   detected by missed heartbeats) hand their upcoming dataset partitions to
+   the fastest hosts. ``rebalance`` is a pure function host_times ->
+   partition map, so every worker computes the identical new assignment with
+   no coordinator (multi-controller property preserved).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def rebalance(
+    host_times: Sequence[float],
+    *,
+    threshold: float = 1.5,
+    dead: Sequence[int] = (),
+) -> Dict[int, List[int]]:
+    """Deterministic partition map: host -> list of dp-shard ids it loads.
+
+    Healthy hosts keep their own shard; shards of slow/dead hosts are
+    re-assigned round-robin to the fastest healthy hosts.
+    """
+    n = len(host_times)
+    times = np.asarray(host_times, dtype=np.float64)
+    healthy = [i for i in range(n) if i not in set(dead)]
+    if not healthy:
+        raise RuntimeError("no healthy hosts")
+    med = float(np.median(times[healthy]))
+    slow = {i for i in healthy if times[i] > threshold * med}
+    donors = sorted(set(dead) | slow)
+    receivers = sorted(
+        (i for i in healthy if i not in slow), key=lambda i: times[i]
+    ) or healthy
+
+    out: Dict[int, List[int]] = {i: [] for i in range(n)}
+    for i in healthy:
+        if i not in slow:
+            out[i].append(i)
+    for j, shard in enumerate(donors):
+        out[receivers[j % len(receivers)]].append(shard)
+    return out
+
+
+class HeartbeatMonitor:
+    """Tracks last-seen iteration per host; hosts silent for ``patience``
+    iterations are declared dead (drives ``rebalance(dead=...)``)."""
+
+    def __init__(self, num_hosts: int, patience: int = 2):
+        self.last_seen = np.zeros(num_hosts, np.int64)
+        self.patience = patience
+
+    def beat(self, host: int, iteration: int) -> None:
+        self.last_seen[host] = iteration
+
+    def dead(self, iteration: int) -> List[int]:
+        return [
+            i for i, seen in enumerate(self.last_seen)
+            if iteration - seen >= self.patience
+        ]

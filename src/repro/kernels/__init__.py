@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots of the RL loop:
+#   flash_attention  - train/prefill attention (causal + SWA + GQA)
+#   decode_attention - flash-decode with shard-combinable (o, lse)
+#   ssd              - Mamba2 state-space-dual chunked scan
+#   rmsnorm          - fused norm
+# ops.py dispatches per backend (Pallas on TPU / interpret in tests /
+# pure-jnp ref on the CPU dry-run); ref.py holds the oracles.
+from repro.kernels import ops

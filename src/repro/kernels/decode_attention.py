@@ -1,0 +1,159 @@
+"""Flash-decode Pallas TPU kernel (serve_step path).
+
+One new token per sequence attends to a long (possibly partially filled,
+possibly sequence-sharded) KV cache. Grid (B, KVH, nS) with the S axis minor;
+all H//KVH query heads sharing a kv head are processed together so the
+(group x block_s) logits matmul has some MXU utilisation. Emits (o, lse) so
+that shards of a sequence-sharded cache can be combined exactly with
+``ref.combine_decode_shards`` across the `model` mesh axis.
+
+cache_len is a scalar-prefetch operand ((B,) int32): number of valid slots
+per sequence; ``pos_offset`` is the absolute position of local cache slot 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(
+    len_ref,  # scalar prefetch (B,) int32
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    lse_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    block_s: int,
+    num_s_blocks: int,
+    pos_offset: int,
+    window: Optional[int],
+    group: int,
+):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = len_ref[b]
+    blk_lo = si * block_s + pos_offset
+    # skip blocks entirely beyond the valid region (or before the window)
+    needed = blk_lo < cache_len
+    if window is not None:
+        needed &= (blk_lo + block_s) > (cache_len - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0, :, :]  # (group, D)
+        k = k_ref[0, :, 0, :]  # (block_s, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        s = s * scale  # (group, block_s)
+        kpos = blk_lo + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+        valid = kpos < cache_len
+        if window is not None:
+            valid &= kpos > (cache_len - 1) - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(si == num_s_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, :1], 1e-20)
+        o_ref[0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0, :] = (m_ref[:, 0] + jnp.log(l[:, 0]))
+
+
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cache_len: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    pos_offset: int = 0,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (o (B,H,D), lse (B,H))."""
+    B, H, D = q.shape
+    _, S, KVH, _ = k.shape
+    assert H % KVH == 0
+    group = H // KVH
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    block_s = min(block_s, S)
+    assert S % block_s == 0
+    ns = S // block_s
+    # reshape q to (B, KVH, group, D): heads are kv-major contiguous
+    qg = q.reshape(B, KVH, group, D)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        block_s=block_s,
+        num_s_blocks=ns,
+        pos_offset=pos_offset,
+        window=window,
+        group=group,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KVH, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), lambda b, kh, si, lens: (b, kh, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, D), lambda b, kh, si, lens: (b, si, kh, 0)),
+            pl.BlockSpec((1, block_s, 1, D), lambda b, kh, si, lens: (b, si, kh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, group, D), lambda b, kh, si, lens: (b * KVH + kh, 0, 0)),
+            pl.BlockSpec((1, group), lambda b, kh, si, lens: (b * KVH + kh, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, D), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+        ],
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B * KVH, group, D), q.dtype),
+            jax.ShapeDtypeStruct((B * KVH, group), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, k, v)
+    return o.reshape(B, H, D), lse.reshape(B, H)

@@ -1,0 +1,115 @@
+"""jit'd dispatch wrappers over the Pallas kernels.
+
+Mode resolution (``REPRO_KERNEL_MODE`` env var or :func:`set_mode`):
+  auto      -> Pallas on TPU backends, pure-jnp ref elsewhere (CPU dry-run
+               lowers the ref path; Mosaic has no CPU target)
+  pallas    -> force compiled Pallas
+  interpret -> Pallas with interpret=True (kernel-correctness tests on CPU)
+  ref       -> force pure-jnp oracles
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import ssd as _ssd
+from repro.kernels import rmsnorm as _rn
+
+_MODE: Optional[str] = None
+
+
+def set_mode(mode: Optional[str]) -> None:
+    """Override kernel dispatch: auto | pallas | interpret | ref | None."""
+    global _MODE
+    _MODE = mode
+
+
+def current_mode() -> str:
+    mode = _MODE or os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return mode
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=None, scale=None, q_offset=0
+):
+    mode = current_mode()
+    if mode == "ref":
+        return _ref.flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset
+        )
+    return _fa.flash_attention(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        scale=scale,
+        q_offset=q_offset,
+        interpret=(mode == "interpret"),
+    )
+
+
+def decode_attention(
+    q, k, v, cache_len, *, scale=None, window=None, pos_offset=0
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (o, lse) in every mode (shard-combinable)."""
+    mode = current_mode()
+    if mode == "ref":
+        return _ref.decode_attention(
+            q,
+            k,
+            v,
+            cache_len,
+            scale=scale,
+            window=window,
+            pos_offset=pos_offset,
+            return_lse=True,
+        )
+    return _da.decode_attention(
+        q,
+        k,
+        v,
+        cache_len,
+        scale=scale,
+        window=window,
+        pos_offset=pos_offset,
+        interpret=(mode == "interpret"),
+    )
+
+
+def combine_decode_shards(o_parts, lse_parts):
+    return _ref.combine_decode_shards(o_parts, lse_parts)
+
+
+def ssd(x, dt, A, Bm, Cm, D, *, chunk=128, return_state=False):
+    mode = current_mode()
+    if mode == "ref":
+        out = _ref.ssd_chunked(
+            x, dt, A, Bm, Cm, D, chunk=min(chunk, x.shape[1]), return_state=True
+        )
+        y, h = out
+    else:
+        y, h = _ssd.ssd(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=(mode == "interpret"))
+    if return_state:
+        return y, h
+    return y
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, D, h):
+    # single-token step is pure VPU work; the jnp form is already minimal
+    return _ref.ssd_decode_step(x, dt, A, Bm, Cm, D, h)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6):
+    mode = current_mode()
+    if mode == "ref":
+        return _ref.rmsnorm(x, w, eps=eps)
+    return _rn.rmsnorm(x, w, eps=eps, interpret=(mode == "interpret"))

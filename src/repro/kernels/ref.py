@@ -1,0 +1,327 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth for kernel tests (``assert_allclose`` sweeps) AND
+the lowering path used inside the CPU dry-run (Pallas/Mosaic only lowers on
+TPU). FLOP counts match the kernels; fusion differences are noted in
+EXPERIMENTS.md.
+
+Shapes (conventions used throughout the repo):
+  q              (B, S, H, D)
+  k, v           (B, S, KVH, D)      KVH | H  (GQA groups = H // KVH)
+  decode q       (B, H, D)           single new token per sequence
+  ssd x          (B, S, NH, P)       P = head dim
+  ssd dt         (B, S, NH)          softplus'd, positive
+  ssd A          (NH,)               negative scalars
+  ssd B, C       (B, S, G, N)        N = state dim, G | NH
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraint import constrain
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# attention (training / prefill)
+# --------------------------------------------------------------------------- #
+def _gqa_repeat(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B,S,KVH,D) -> (B,S,H,D) by repeating each kv head H//KVH times."""
+    kvh = k.shape[2]
+    if kvh == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kvh, axis=2)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Full (masked) attention oracle.
+
+    ``q_offset``: absolute position of q[0] (used when queries are a suffix of
+    the kv sequence, e.g. chunked prefill).
+    ``window``: sliding-window width; position i attends to [i-window+1, i].
+
+    GQA is computed GROUPED — q reshaped (B, KVH, G, Sq, D) against the raw
+    (B, Sk, KVH, D) k/v — never materializing the repeated (B, Sk, H, D)
+    tensors (a 6x HBM-traffic saving at kv=8/H=48; §Perf iteration 1).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    g = H // KVH
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    qg = q.reshape(B, Sq, KVH, g, D)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    )
+    logits = logits * scale
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# decode attention (one new token vs a long cache)
+# --------------------------------------------------------------------------- #
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cache_len: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    return_lse: bool = False,
+    pos_offset: int = 0,
+):
+    """One-token attention vs a (possibly partially-filled) KV cache.
+
+    q (B,H,D); k,v (B,S,KVH,D); cache_len (B,) int32 — number of valid slots.
+    ``pos_offset``: absolute position of cache slot 0 (non-zero when the cache
+    is sequence-sharded; lets shards mask + combine exactly via the returned
+    log-sum-exp).
+
+    Returns o (B,H,D) [and lse (B,H) if ``return_lse``].
+
+    GQA grouped (no repeated-kv materialization): logits are computed
+    (B, KVH, G, S) straight against the cache layout, and the seq axis stays
+    shardable over `model` — the layout the decode cache lives in.
+    """
+    B, H, D = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    g = H // KVH
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    qg = q.reshape(B, KVH, g, D)
+    logits = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg, k, preferred_element_type=jnp.float32
+    )
+    logits = logits * scale
+    logits = constrain(logits, "dp", None, None, "tp")  # seq stays sharded
+    kpos = jnp.arange(S)[None, :] + pos_offset  # absolute positions
+    valid = kpos < cache_len[:, None]
+    if window is not None:
+        valid &= kpos > (cache_len[:, None] - 1) - window
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    # guard fully-masked shards: exp(NEG_INF - NEG_INF) would be 1
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(logits - m_safe)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v).astype(jnp.float32)
+    o = (o / jnp.maximum(l, 1e-20)).reshape(B, H, D)
+    if return_lse:
+        lse = (m_safe + jnp.log(jnp.maximum(l, 1e-20))).reshape(B, H)
+        return o.astype(q.dtype), lse
+    return o.astype(q.dtype)
+
+
+def combine_decode_shards(o_parts: jax.Array, lse_parts: jax.Array) -> jax.Array:
+    """Exactly combine per-shard (o, lse) from a sequence-sharded cache.
+
+    o_parts (P, B, H, D) float; lse_parts (P, B, H). Standard flash-decode
+    log-sum-exp merge.
+    """
+    m = jnp.max(lse_parts, axis=0, keepdims=True)
+    w = jnp.exp(lse_parts - m)  # (P,B,H)
+    num = jnp.sum(o_parts.astype(jnp.float32) * w[..., None], axis=0)
+    den = jnp.sum(w, axis=0)[..., None]
+    return (num / jnp.maximum(den, 1e-20)).astype(o_parts.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Mamba2 / SSD
+# --------------------------------------------------------------------------- #
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    D: jax.Array,
+    *,
+    h0: Optional[jax.Array] = None,
+    return_state: bool = False,
+):
+    """Sequential (exact) SSD recurrence — the oracle.
+
+        h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T        (per head)
+        y_t = C_t . h_t + D x_t
+
+    x (B,S,NH,P); dt (B,S,NH); A (NH,); B,C (B,S,G,N); D (NH,);
+    h0 (B,NH,P,N) optional initial state. Returns y (B,S,NH,P)
+    [and final state if ``return_state``].
+    """
+    b, s, nh, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = nh // g
+    Bh = jnp.repeat(B, rep, axis=2)  # (B,S,NH,N)
+    Ch = jnp.repeat(C, rep, axis=2)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, p, n), dtype=jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,NH,P),(B,NH),(B,NH,N),(B,NH,N)
+        decay = jnp.exp(dtt * A[None, :])[..., None, None]  # (B,NH,1,1)
+        dBx = (dtt[..., None, None] * bt[:, :, None, :]) * xt[..., None]
+        h = decay * h.astype(jnp.float32) + dBx.astype(jnp.float32)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct.astype(jnp.float32))
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Ch, 1, 0).astype(jnp.float32),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + D[None, None, :, None] * x.astype(jnp.float32)
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, hT
+    return y
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} a[..., k].
+
+    Lower-triangular (i >= j); -inf above the diagonal.
+    """
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{j<k<=i}
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    D: jax.Array,
+    *,
+    chunk: int = 128,
+    h0: Optional[jax.Array] = None,
+    return_state: bool = False,
+):
+    """Chunked (SSD / state-space-dual) form — matmul-rich, what the Pallas
+    kernel implements. Mathematically identical to :func:`ssd_scan`.
+    """
+    b, s, nh, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+    rep = nh // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = dtf * A[None, None, :]  # (B,S,NH) log-decay per step
+
+    # reshape to chunks: (B,NC,L,...)
+    def ch(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc, dtc, ac, Bc, Cc = ch(xf), ch(dtf), ch(a), ch(Bh), ch(Ch)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    # L[i,j] = exp(sum_{j<k<=i} a_k), masked lower-triangular
+    aseg = _segsum(jnp.moveaxis(ac, -1, -2))  # (B,NC,NH,L,L)
+    Lmat = jnp.exp(aseg)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)  # (B,NC,NH,L,L)
+    gated = scores * Lmat
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", gated, dtc[..., None] * xc)
+
+    # ---- chunk states: S_c = sum_i exp(a_end..i) dt_i B_i x_i^T ----
+    a_cum = jnp.cumsum(ac, axis=2)  # (B,NC,L,NH) inclusive
+    a_tot = a_cum[:, :, -1:, :]  # (B,NC,1,NH)
+    decay_to_end = jnp.exp(a_tot - a_cum)  # exp(sum_{i<k<=end})
+    states = jnp.einsum(
+        "bclhn,bclhp->bchpn", Bc * (dtc * decay_to_end)[..., None], xc
+    )
+
+    # ---- inter-chunk recurrence over chunk states ----
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, p, n), dtype=jnp.float32)
+    chunk_decay = jnp.exp(a_tot[:, :, 0, :])  # (B,NC,NH)
+
+    def step(h, inp):
+        st, dec = inp  # (B,NH,P,N), (B,NH)
+        h_new = dec[..., None, None] * h + st
+        return h_new, h  # emit state *entering* the chunk
+
+    hT, h_in = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,NC,NH,P,N) state entering each chunk
+
+    # ---- inter-chunk output: y_i += C_i . (exp(a_cum_i) * h_in) ----
+    in_decay = jnp.exp(a_cum)  # (B,NC,L,NH)
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp", Cc * in_decay[..., None], h_in)
+
+    y = y_intra + y_inter + D[None, None, None, :, None] * xc
+    y = y.reshape(b, s, nh, p).astype(x.dtype)
+    if return_state:
+        return y, hT
+    return y
+
+
+def ssd_decode_step(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    D: jax.Array,
+    h: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD step. x (B,NH,P); dt (B,NH); B,C (B,G,N); h (B,NH,P,N).
+
+    Returns (y (B,NH,P), h_next).
+    """
+    nh = x.shape[1]
+    g = B.shape[1]
+    rep = nh // g
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A[None, :])[..., None, None]
+    dBx = (dtf[..., None, None] * Bh[:, :, None, :]) * xf[..., None]
+    h_next = decay * h.astype(jnp.float32) + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", h_next, Ch) + D[None, :, None] * xf
+    return y.astype(x.dtype), h_next.astype(h.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rmsnorm
+# --------------------------------------------------------------------------- #
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,55 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+Single HBM pass: mean-square reduce + rsqrt + scale, tiled over rows.
+x (R, D) — callers flatten leading dims; w (D,) with the gemma-style
+(1 + w) scale convention used across the repo.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + w[None, :])).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    orig_shape = x.shape
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    r = x2.shape[0]
+    block_rows = min(block_rows, r)
+    # pad rows so the grid divides evenly
+    pad = (-r) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    nr = x2.shape[0] // block_rows
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    if pad:
+        out = out[:r]
+    return out.reshape(orig_shape)

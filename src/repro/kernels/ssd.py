@@ -1,0 +1,143 @@
+"""Mamba2 SSD (state-space dual) chunked-scan Pallas TPU kernel.
+
+The SSD form turns the linear recurrence into chunk-local matmuls (MXU work)
+plus a tiny inter-chunk recurrence. Grid (B, NH, NC) with the chunk axis
+minor: the running state h (P x N, fp32) lives in VMEM scratch and is carried
+across the sequential chunk iterations — the TPU-native replacement for the
+CUDA warp-parallel scan of the original implementation.
+
+Per chunk of length L (default 128):
+  a        = dt * A                              (L,)       log-decay
+  L[i,j]   = exp(sum_{j<k<=i} a_k) (i>=j)        (L,L)
+  scores   = (C B^T) * L                         (L,L)      MXU
+  y_intra  = scores @ (dt * x)                   (L,P)      MXU
+  y_inter  = (C * exp(cum_a)) @ h^T              (L,P)      MXU
+  h       <- exp(tot_a) h + x^T @ (B * dt * exp(tot_a - cum_a))   (P,N) MXU
+  y        = y_intra + y_inter + D * x
+
+Layouts: x (B,S,NH,P); dt (B,S,NH); A,D (NH,); Bm,Cm (B,S,G,N).
+State dim N and head dim P are zero-padded to the 128-lane boundary by the
+wrapper when needed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,
+    dt_ref,
+    a_ref,  # A (1,) for this head
+    b_ref,
+    c_ref,
+    d_ref,  # D (1,)
+    y_ref,
+    hout_ref,
+    h_ref,  # scratch (P, N) fp32
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (L,)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)  # (L, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)  # (L, N)
+    A = a_ref[0]
+    D = d_ref[0]
+
+    a = dt * A  # (L,)
+    a_cum = jnp.cumsum(a)  # inclusive
+    a_tot = a_cum[-1]
+
+    # intra-chunk
+    seg = a_cum[:, None] - a_cum[None, :]  # sum_{j<k<=i}
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    Lmat = jnp.where(li >= lj, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    gated = scores * Lmat
+    y_intra = jax.lax.dot_general(
+        gated, dt[:, None] * x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk: contribution of incoming state
+    h = h_ref[...]  # (P, N)
+    c_dec = Cm * jnp.exp(a_cum)[:, None]  # (L, N)
+    y_inter = jax.lax.dot_general(
+        c_dec, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, P)
+
+    # state update
+    w = (dt * jnp.exp(a_tot - a_cum))[:, None] * Bm  # (L, N)
+    s_new = jax.lax.dot_general(
+        x, w, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (P, N)
+    h_ref[...] = jnp.exp(a_tot) * h + s_new
+
+    y = y_intra + y_inter + D * x
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        hout_ref[0, 0, :, :] = h_ref[...]
+
+
+def ssd(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    D: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,NH,P), final state (B,NH,P,N) fp32)."""
+    b, s, nh, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert nh % g == 0
+    rep = nh // g
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk, num_chunks=nc)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi // rep, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, nh, p), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, D)
+    return y, h

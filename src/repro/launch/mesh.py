@@ -1,0 +1,29 @@
+"""Production mesh builders (deliverable e).
+
+Defined as FUNCTIONS so importing this module never touches jax device state.
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — `pod` is the
+extra data-parallel dimension whose gradient reduction crosses the
+inter-pod links.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh(shape=None, axes=("data", "model")):
+    """Whatever the current backend offers (tests / CPU examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1) if len(axes) == 2 else (n,)
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))

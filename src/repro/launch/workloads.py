@@ -1,0 +1,224 @@
+"""Workload builders for the dry-run / benchmarks: the lowered programs.
+
+For each (arch x shape) cell this module provides
+  * ``input_specs(cfg, shape, mesh)`` — ShapeDtypeStruct stand-ins for every
+    model input (weak-type-correct, shardable, no device allocation), plus
+    the matching PartitionSpec trees;
+  * ``build_workload(...)`` — the jit'd step with explicit in/out shardings:
+    train_4k   -> train_step   (loss+grads+AdamW; donates state)
+    prefill_*  -> prefill_step (prompt pass emitting decode caches)
+    decode_* / long_* -> serve_step (one token vs filled caches; donates them)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shr
+from repro.models import get_model
+from repro.models import lm as lm_mod
+from repro.optim import adamw
+from repro.rl import trainer
+
+
+class Workload(NamedTuple):
+    fn: Any  # jit'd step
+    args: Tuple  # ShapeDtypeStruct pytrees to lower with
+    donate: Tuple[int, ...]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# --------------------------------------------------------------------------- #
+# input specs per shape kind
+# --------------------------------------------------------------------------- #
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    B, S = shape.global_batch, shape.seq_len
+    dp = shr.batch_axes(mesh, B)
+    if cfg.is_encoder_decoder:
+        half = S // 2
+        batch = {
+            "frames": _sds((B, half, cfg.d_model), jnp.bfloat16),
+            "tokens": _sds((B, half), jnp.int32),
+            "labels": _sds((B, half), jnp.int32),
+        }
+        specs = {"frames": P(dp, None, None), "tokens": P(dp, None), "labels": P(dp, None)}
+    elif cfg.num_prefix_embeds > 1:
+        pre = cfg.num_prefix_embeds
+        batch = {
+            "prefix_embeds": _sds((B, pre, cfg.d_model), jnp.bfloat16),
+            "tokens": _sds((B, S - pre), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        specs = {
+            "prefix_embeds": P(dp, None, None),
+            "tokens": P(dp, None),
+            "labels": P(dp, None),
+        }
+    else:
+        batch = {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+        specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    return batch, specs
+
+
+def prompt_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Prefill inputs (prompt tokens [+ modality prefix])."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = shr.batch_axes(mesh, B)
+    if cfg.is_encoder_decoder:
+        args = {
+            "tokens": _sds((B, S), jnp.int32),
+            "frames": _sds((B, cfg.encoder_len, cfg.d_model), jnp.bfloat16),
+        }
+        specs = {"tokens": P(dp, None), "frames": P(dp, None, None)}
+    elif cfg.num_prefix_embeds > 1:
+        pre = cfg.num_prefix_embeds
+        args = {
+            "tokens": _sds((B, S - pre), jnp.int32),
+            "prefix_embeds": _sds((B, pre, cfg.d_model), jnp.bfloat16),
+        }
+        specs = {"tokens": P(dp, None), "prefix_embeds": P(dp, None, None)}
+    else:
+        args = {"tokens": _sds((B, S), jnp.int32)}
+        specs = {"tokens": P(dp, None)}
+    return args, specs
+
+
+def state_shapes(cfg: ModelConfig, key=None):
+    """ShapeDtypeStructs for TrainState without allocating."""
+    model = get_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    opt = jax.eval_shape(lambda p: adamw.init(p), params)
+    return trainer.TrainState(params=params, opt=opt)
+
+
+def caches_shapes(cfg: ModelConfig, batch: int, smax: int):
+    model = get_model(cfg)
+    return jax.eval_shape(lambda: model.init_caches(batch, smax))
+
+
+# --------------------------------------------------------------------------- #
+# workload builders
+# --------------------------------------------------------------------------- #
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                *, unroll: bool = False) -> Workload:
+    model = get_model(cfg)
+    state = state_shapes(cfg)
+    pspecs = shr.param_specs(cfg, mesh, state.params)
+    sspecs = trainer.TrainState(params=pspecs, opt=shr.opt_state_specs(pspecs))
+    batch, bspecs = train_inputs(cfg, shape, mesh)
+    step = trainer.make_lm_train_step(model, unroll=unroll)
+    fn = jax.jit(
+        step,
+        in_shardings=(shr.named(mesh, sspecs), shr.named(mesh, bspecs)),
+        out_shardings=(shr.named(mesh, sspecs), None),
+        donate_argnums=(0,),
+    )
+    return Workload(fn=fn, args=(state, batch), donate=(0,))
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                  *, unroll: bool = False) -> Workload:
+    model = get_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = shr.param_specs(cfg, mesh, params)
+    args, aspecs = prompt_inputs(cfg, shape, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    cshapes = caches_shapes(cfg, B, S)
+    cspecs = shr.cache_specs(cfg, mesh, B, cshapes)
+    dp = shr.batch_axes(mesh, B)
+
+    def prefill_step(params, args):
+        logits, caches, cache_len = model.prefill(params, **args, smax=S,
+                                                  unroll=unroll)
+        return jnp.argmax(logits, -1).astype(jnp.int32), caches, cache_len
+
+    fn = jax.jit(
+        prefill_step,
+        in_shardings=(shr.named(mesh, pspecs), shr.named(mesh, aspecs)),
+        out_shardings=(
+            NamedSharding(mesh, P(dp)),
+            shr.named(mesh, cspecs),
+            NamedSharding(mesh, P(dp)),
+        ),
+    )
+    return Workload(fn=fn, args=(params, args), donate=())
+
+
+HBM_BUDGET = 15.3e9  # of 16GB v5e: deepseek decode_32k fits resident at
+# 14.8GB (weights 8.4 + cache 6.4); int8 KV (future work) would add 3GB slack
+
+
+def serve_param_mode(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> str:
+    """Pick the decode weight layout: TP-replicated (weights resident, no
+    per-step gathers) when weights + caches fit the HBM budget; otherwise
+    keep the FSDP layout and pay the per-step gather (the price of fitting,
+    recorded in the roofline notes)."""
+    tp = mesh.shape["model"]
+    weight_bytes = cfg.num_params() * 2 / tp
+    caches = caches_shapes(cfg, shape.global_batch, shape.seq_len)
+    n_dev = 1
+    for v in dict(mesh.shape).values():
+        n_dev *= v
+    cache_bytes = sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(caches)) / n_dev
+    return "serve" if weight_bytes + cache_bytes < HBM_BUDGET else "train"
+
+
+def build_serve(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                *, unroll: bool = False, param_mode: str = None) -> Workload:
+    """One decode step against a seq_len-deep cache (decode_* / long_*).
+
+    ``param_mode`` overrides the weight-layout decision — callers compiling
+    DEPTH-REDUCED configs (the roofline extrapolation) must pass the decision
+    made on the FULL config, or a 1-layer model always "fits" resident."""
+    model = get_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = shr.param_specs(cfg, mesh, params,
+                             mode=param_mode or serve_param_mode(cfg, shape, mesh))
+    B, S = shape.global_batch, shape.seq_len
+    cshapes = caches_shapes(cfg, B, S)
+    cspecs = shr.cache_specs(cfg, mesh, B, cshapes)
+    dp = shr.batch_axes(mesh, B)
+    tok = _sds((B,), jnp.int32)
+    clen = _sds((B,), jnp.int32)
+
+    def serve_step(params, token, caches, cache_len):
+        logits, caches, cache_len = model.decode_step(
+            params, token, caches, cache_len, unroll=unroll
+        )
+        return jnp.argmax(logits, -1).astype(jnp.int32), caches, cache_len
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(
+            shr.named(mesh, pspecs),
+            NamedSharding(mesh, P(dp)),
+            shr.named(mesh, cspecs),
+            NamedSharding(mesh, P(dp)),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, P(dp)),
+            shr.named(mesh, cspecs),
+            NamedSharding(mesh, P(dp)),
+        ),
+        donate_argnums=(2,),
+    )
+    return Workload(fn=fn, args=(params, tok, cshapes, clen), donate=(2,))
+
+
+def build_workload(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   *, unroll: bool = False, serve_mode: str = None) -> Workload:
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, unroll=unroll)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, unroll=unroll)
+    return build_serve(cfg, shape, mesh, unroll=unroll, param_mode=serve_mode)

@@ -1,0 +1,64 @@
+"""Unified model API over both backbones (decoder-only LM and enc-dec).
+
+All higher layers (RL engines, launcher, dry-run, benchmarks) talk to
+:class:`Model` only — family dispatch stays here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.is_encoder_decoder
+
+    # ---- init ----
+    def init(self, key) -> Dict[str, Any]:
+        return (encdec.init if self.is_encdec else lm.init)(self.cfg, key)
+
+    # ---- training ----
+    def loss(self, params, batch, *, remat: bool = True, unroll: bool = False):
+        """batch keys: tokens, labels [, prefix_embeds | frames]."""
+        if self.is_encdec:
+            return encdec.loss_fn(self.cfg, params, batch, remat=remat, unroll=unroll)
+        return lm.loss_fn(self.cfg, params, batch, remat=remat, unroll=unroll)
+
+    # ---- RL scoring ----
+    def logprobs(self, params, tokens, *, prefix_embeds=None, frames=None,
+                 remat: bool = False):
+        if self.is_encdec:
+            return encdec.logprobs_fn(self.cfg, params, tokens, frames, remat=remat)
+        return lm.logprobs_fn(self.cfg, params, tokens,
+                              prefix_embeds=prefix_embeds, remat=remat)
+
+    # ---- serving ----
+    def init_caches(self, batch: int, smax: int):
+        if self.is_encdec:
+            return encdec.init_caches(self.cfg, batch, smax)
+        return lm.init_caches(self.cfg, batch, smax)
+
+    def prefill(self, params, tokens, *, smax: int, prefix_embeds=None, frames=None,
+                unroll: bool = False):
+        if self.is_encdec:
+            return encdec.prefill(self.cfg, params, tokens, frames, smax=smax,
+                                  unroll=unroll)
+        return lm.prefill(self.cfg, params, tokens, smax=smax,
+                          prefix_embeds=prefix_embeds, unroll=unroll)
+
+    def decode_step(self, params, token, caches, cache_len, *, unroll: bool = False):
+        if self.is_encdec:
+            return encdec.decode_step(self.cfg, params, token, caches, cache_len,
+                                      unroll=unroll)
+        return lm.decode_step(self.cfg, params, token, caches, cache_len,
+                              unroll=unroll)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

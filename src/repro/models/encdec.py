@@ -1,0 +1,222 @@
+"""Encoder-decoder backbone (seamless-m4t): bidirectional encoder over
+precomputed audio-frame embeddings (frontend stub per the assignment) + causal
+decoder with cross-attention. Both stacks scan over layers.
+
+Decode caches: decoder self-attn KV (L,B,W,H,hd) + cross-attn KV precomputed
+once from the encoder memory at prefill (L,B,S_enc,H,hd).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers
+from repro.models.lm import (
+    IGNORE,
+    _head_matrix,
+    ce_loss,
+    embed_tokens,
+    mask_padded_vocab,
+    token_stats,
+)
+
+Params = Dict[str, Any]
+
+
+def _init_enc_layer(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": layers.init_norm(cfg),
+        "attn": layers.init_attention(cfg, ks[0]),
+        "norm2": layers.init_norm(cfg),
+        "mlp": layers.init_mlp(cfg, ks[1]),
+    }
+
+
+def _init_dec_layer(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": layers.init_norm(cfg),
+        "self_attn": layers.init_attention(cfg, ks[0]),
+        "norm_x": layers.init_norm(cfg),
+        "cross_attn": layers.init_attention(cfg, ks[1], cross=True),
+        "norm2": layers.init_norm(cfg),
+        "mlp": layers.init_mlp(cfg, ks[2]),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.num_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    v, d = cfg.padded_vocab, cfg.d_model
+    params: Params = {
+        "encoder": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys),
+        "decoder": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dec_keys),
+        "enc_norm": layers.init_norm(cfg),
+        "final_norm": layers.init_norm(cfg),
+        "embed": (jax.random.normal(ks[2], (v, d), jnp.float32) * 0.02).astype(jnp.bfloat16),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(ks[3], (d, v), jnp.float32) / (d**0.5)
+        ).astype(jnp.bfloat16)
+    return params
+
+
+def _maybe_scan(body, carry, xs, *, unroll, length):
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        carry, y = body(carry, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array, *, remat=False,
+           unroll=False):
+    """frames (B, S_enc, d) precomputed embeddings -> memory (B, S_enc, d)."""
+    positions = jnp.arange(frames.shape[1])[None, :]
+
+    def body(h, p):
+        hn = layers.apply_norm(cfg, p["norm1"], h)
+        h = h + layers.self_attention(cfg, p["attn"], hn, positions, causal=False)
+        hn2 = layers.apply_norm(cfg, p["norm2"], h)
+        h = h + layers.apply_mlp(cfg, p["mlp"], hn2)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = _maybe_scan(body, frames.astype(jnp.bfloat16), params["encoder"],
+                       unroll=unroll, length=cfg.num_encoder_layers)
+    return layers.apply_norm(cfg, params["enc_norm"], h)
+
+
+def _dec_layer_full(cfg, p, h, positions, memory):
+    hn = layers.apply_norm(cfg, p["norm1"], h)
+    h = h + layers.self_attention(cfg, p["self_attn"], hn, positions, causal=True)
+    hx = layers.apply_norm(cfg, p["norm_x"], h)
+    mkv = layers.memory_kv(cfg, p["cross_attn"], memory)
+    h = h + layers.cross_attention(cfg, p["cross_attn"], hx, mkv)
+    hn2 = layers.apply_norm(cfg, p["norm2"], h)
+    h = h + layers.apply_mlp(cfg, p["mlp"], hn2)
+    return h
+
+
+def decode_full(cfg, params, tokens, memory, *, remat=False, unroll=False):
+    """Teacher-forced decoder pass -> hidden states (B, S_dec, d)."""
+    h = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def body(h, p):
+        return _dec_layer_full(cfg, p, h, positions, memory), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = _maybe_scan(body, h, params["decoder"], unroll=unroll,
+                       length=cfg.num_layers)
+    return layers.apply_norm(cfg, params["final_norm"], h)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch, *, remat=True, unroll=False):
+    """batch: frames (B,S_enc,d), tokens (B,S_dec), labels (B,S_dec)."""
+    memory = encode(cfg, params, batch["frames"], remat=remat, unroll=unroll)
+    h = decode_full(cfg, params, batch["tokens"], memory, remat=remat, unroll=unroll)
+    return ce_loss(cfg, params, h, batch["labels"], unroll=unroll)
+
+
+def logprobs_fn(cfg, params, tokens, frames, *, remat=False):
+    memory = encode(cfg, params, frames, remat=remat)
+    h = decode_full(cfg, params, tokens, memory, remat=remat)
+    labels = tokens[:, 1:]
+    lp, ent, _ = token_stats(cfg, params, h[:, :-1], labels)
+    zero = jnp.zeros((tokens.shape[0], 1), lp.dtype)
+    return jnp.concatenate([zero, lp], 1), jnp.concatenate([zero, ent], 1)
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+def prefill(cfg: ModelConfig, params: Params, tokens, frames, *, smax: int,
+            unroll=False):
+    """Encode + teacher-forced decoder prompt pass; emits decode caches."""
+    memory = encode(cfg, params, frames, unroll=unroll)
+    B, S = tokens.shape
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    h = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(S)[None, :]
+
+    def body(h, p):
+        hn = layers.apply_norm(cfg, p["norm1"], h)
+        q, k, v = layers.qkv_proj(cfg, p["self_attn"], hn, positions)
+        o = ops.flash_attention(q, k, v, causal=True)
+        h = h + layers.out_proj(cfg, p["self_attn"], o)
+        kc = jnp.zeros((B, smax, kvh, hd), k.dtype)
+        vc = jnp.zeros((B, smax, kvh, hd), v.dtype)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+        hx = layers.apply_norm(cfg, p["norm_x"], h)
+        mk, mv = layers.memory_kv(cfg, p["cross_attn"], memory)
+        h = h + layers.cross_attention(cfg, p["cross_attn"], hx, (mk, mv))
+        hn2 = layers.apply_norm(cfg, p["norm2"], h)
+        h = h + layers.apply_mlp(cfg, p["mlp"], hn2)
+        return h, {"k": kc, "v": vc, "mk": mk, "mv": mv}
+
+    h, caches = _maybe_scan(body, h, params["decoder"], unroll=unroll,
+                            length=cfg.num_layers)
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = mask_padded_vocab(cfg, (h[:, -1] @ _head_matrix(cfg, params)).astype(jnp.float32))
+    return logits, caches, jnp.full((B,), S, jnp.int32)
+
+
+def init_caches(cfg: ModelConfig, batch: int, smax: int):
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    L, se = cfg.num_layers, cfg.encoder_len
+    return {
+        "k": jnp.zeros((L, batch, smax, kvh, hd), jnp.bfloat16),
+        "v": jnp.zeros((L, batch, smax, kvh, hd), jnp.bfloat16),
+        "mk": jnp.zeros((L, batch, se, kvh, hd), jnp.bfloat16),
+        "mv": jnp.zeros((L, batch, se, kvh, hd), jnp.bfloat16),
+    }
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, caches, cache_len,
+                unroll=False):
+    """One decoder token vs self-attn cache + fixed cross-attn memory KV."""
+    token = token.reshape(-1, 1)
+    B = token.shape[0]
+    h = embed_tokens(cfg, params, token)
+    enc_valid = jnp.full((B,), cfg.encoder_len, jnp.int32)
+
+    def body(h, xs):
+        p, c = xs
+        hn = layers.apply_norm(cfg, p["norm1"], h)
+        out, (kc, vc) = layers.decode_self_attention(
+            cfg, p["self_attn"], hn, (c["k"], c["v"]), cache_len
+        )
+        h = h + out[:, None]  # out (B, d) -> (B, 1, d)
+        hx = layers.apply_norm(cfg, p["norm_x"], h)
+        q = (hx @ p["cross_attn"]["w_q"])
+        if cfg.use_bias:
+            q = q + p["cross_attn"]["b_q"].astype(q.dtype)
+        q = q.reshape(B, cfg.padded_heads, cfg.head_dim)
+        o, _ = ops.decode_attention(q, c["mk"], c["mv"], enc_valid)
+        h = h + layers.out_proj(cfg, p["cross_attn"], o)[:, None]
+        hn2 = layers.apply_norm(cfg, p["norm2"], h)
+        h = h + layers.apply_mlp(cfg, p["mlp"], hn2)
+        return h, {"k": kc, "v": vc, "mk": c["mk"], "mv": c["mv"]}
+
+    h, new_caches = _maybe_scan(body, h, (params["decoder"], caches),
+                                unroll=unroll, length=cfg.num_layers)
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = mask_padded_vocab(cfg, (h[:, 0] @ _head_matrix(cfg, params)).astype(jnp.float32))
+    return logits, new_caches, cache_len + 1

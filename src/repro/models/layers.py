@@ -1,0 +1,222 @@
+"""Shared model layers: norms, RoPE, MLP flavours, attention mixer.
+
+Pure-functional: every layer is (params-pytree, inputs) -> outputs. Params are
+nested dicts of jax.Arrays so sharding rules (distributed/sharding.py) can be
+expressed as a matching pytree of PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.constraint import constrain
+from repro.kernels import ops
+
+Params = Dict[str, Any]
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / (fan_in**0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(jnp.bfloat16)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"w": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.zeros((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "rmsnorm":
+        return ops.rmsnorm(x, p["w"])
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    return ((1.0 + p["w"]) * y + p["b"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, D) or (..., H, D) with matching positions (..., S) / (...,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLP flavours
+# --------------------------------------------------------------------------- #
+def init_mlp(cfg: ModelConfig, key) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    p: Params = {"w_in": _dense_init(ks[0], (d, f)), "w_out": _dense_init(ks[1], (f, d))}
+    if gated:
+        p["w_gate"] = _dense_init(ks[2], (d, f))
+    if cfg.use_bias:
+        p["b_in"] = jnp.zeros((f,), jnp.float32)
+        p["b_out"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    h = x @ p["w_in"]
+    h = constrain(h, "dp", None, "tp")
+    if cfg.use_bias:
+        h = h + p["b_in"].astype(h.dtype)
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif cfg.mlp_type == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * h
+    elif cfg.mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(cfg.mlp_type)
+    out = h @ p["w_out"]
+    if cfg.use_bias:
+        out = out + p["b_out"].astype(out.dtype)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# attention mixer
+# --------------------------------------------------------------------------- #
+def init_attention(cfg: ModelConfig, key, *, cross: bool = False) -> Params:
+    """Q/K/V/O projections. Q/O use padded_heads (zero-padded heads are exact:
+    their W_o columns are zero)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    hp, kvh = cfg.padded_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    wq = _dense_init(ks[0], (d, hp * hd))
+    wo = _dense_init(ks[3], (hp * hd, d))
+    if cfg.padded_heads != cfg.num_heads:
+        # zero the padded head slots
+        mask = (jnp.arange(hp * hd) < cfg.num_heads * hd)
+        wq = wq * mask[None, :].astype(wq.dtype)
+        wo = wo * mask[:, None].astype(wo.dtype)
+    p: Params = {
+        "w_q": wq,
+        "w_k": _dense_init(ks[1], (d, kvh * hd)),
+        "w_v": _dense_init(ks[2], (d, kvh * hd)),
+        "w_o": wo,
+    }
+    if cfg.use_bias:
+        p["b_q"] = jnp.zeros((hp * hd,), jnp.float32)
+        p["b_k"] = jnp.zeros((kvh * hd,), jnp.float32)
+        p["b_v"] = jnp.zeros((kvh * hd,), jnp.float32)
+        p["b_o"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def qkv_proj(
+    cfg: ModelConfig, p: Params, x: jax.Array, positions: Optional[jax.Array]
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x (B,S,d) -> q (B,S,Hp,hd), k/v (B,S,KVH,hd); RoPE applied if positions."""
+    B, S, _ = x.shape
+    hp, kvh, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if cfg.use_bias:
+        q = q + p["b_q"].astype(q.dtype)
+        k = k + p["b_k"].astype(k.dtype)
+        v = v + p["b_v"].astype(v.dtype)
+    q = constrain(q.reshape(B, S, hp, hd), "dp", None, "tp", None)
+    k = constrain(k.reshape(B, S, kvh, hd), "dp", None, "tp", None)
+    v = constrain(v.reshape(B, S, kvh, hd), "dp", None, "tp", None)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(cfg: ModelConfig, p: Params, o: jax.Array) -> jax.Array:
+    """o (B,S,Hp,hd) or (B,Hp,hd) -> (..., d)."""
+    flat = o.reshape(*o.shape[:-2], -1)
+    out = flat @ p["w_o"]
+    if cfg.use_bias:
+        out = out + p["b_o"].astype(out.dtype)
+    return out
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill-without-cache)."""
+    q, k, v = qkv_proj(cfg, p, x, positions)
+    o = ops.flash_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+    return out_proj(cfg, p, o)
+
+
+def cross_attention(
+    cfg: ModelConfig, p: Params, x: jax.Array, memory_kv: Tuple[jax.Array, jax.Array]
+) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder memory K/V (no RoPE)."""
+    B, S, _ = x.shape
+    hp, hd = cfg.padded_heads, cfg.head_dim
+    q = (x @ p["w_q"])
+    if cfg.use_bias:
+        q = q + p["b_q"].astype(q.dtype)
+    q = q.reshape(B, S, hp, hd)
+    k, v = memory_kv
+    o = ops.flash_attention(q, k, v, causal=False)
+    return out_proj(cfg, p, o)
+
+
+def memory_kv(cfg: ModelConfig, p: Params, memory: jax.Array):
+    """Precompute cross-attention K/V from encoder output (B,S_enc,d)."""
+    B, S, _ = memory.shape
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    k = memory @ p["w_k"]
+    v = memory @ p["w_v"]
+    if cfg.use_bias:
+        k = k + p["b_k"].astype(k.dtype)
+        v = v + p["b_v"].astype(v.dtype)
+    return k.reshape(B, S, kvh, hd), v.reshape(B, S, kvh, hd)
+
+
+def decode_self_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B, 1, d) — single new token
+    kv_cache: Tuple[jax.Array, jax.Array],  # (B, S, KVH, hd) each
+    cache_len: jax.Array,  # (B,) valid slots BEFORE this token
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One decode step: project, write slot, attend over the cache."""
+    B = x.shape[0]
+    q, k_new, v_new = qkv_proj(cfg, p, x, cache_len[:, None])  # rope at pos=len
+    kc, vc = kv_cache
+    # scatter the new K/V into slot cache_len (per batch row)
+    bidx = jnp.arange(B)
+    kc = kc.at[bidx, cache_len].set(k_new[:, 0])
+    vc = vc.at[bidx, cache_len].set(v_new[:, 0])
+    o, _ = ops.decode_attention(
+        q[:, 0], kc, vc, cache_len + 1, window=cfg.sliding_window
+    )
+    return out_proj(cfg, p, o), (kc, vc)

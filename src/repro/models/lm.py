@@ -1,0 +1,551 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layer stacks are *pattern-compressed*: the per-layer kind sequence
+(cfg.layer_kinds()) is reduced to its smallest repeating pattern P, params are
+stacked over the N = num_layers / P repetitions, and the forward pass is a
+``lax.scan`` over the N groups with the P positions unrolled inside the body.
+Homogeneous archs get P=1 (pure scan over layers, e.g. 95-layer deepseek);
+jamba gets P=8 / N=4. This keeps compile time and HLO size flat in depth —
+essential when lowering for 512 devices.
+
+Three execution modes share one backbone:
+  full     — whole sequence, no cache (training loss / RL logprobs)
+  prefill  — whole sequence, emits decode caches
+  decode   — one token per sequence against the caches
+
+Decode caches (per pattern position, stacked over groups):
+  attn  {"k","v"} (N,B,W,KVH,hd) — W = min(Smax, sliding_window): SWA archs get
+        a ring buffer bounded at the window (the long_500k enabler for mixtral)
+  ssm   {"ssm","conv_x","conv_bc"} — constant-size Mamba2 state
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.constraint import constrain, residual_entries
+from repro.kernels import ops
+from repro.models import layers, moe, ssm
+
+Params = Dict[str, Any]
+
+LOSS_CHUNK = 1024  # sequence chunking for the CE/logprob loss (memory bound)
+IGNORE = -1  # label id excluded from the loss
+
+
+# --------------------------------------------------------------------------- #
+# pattern compression
+# --------------------------------------------------------------------------- #
+def pattern_length(cfg: ModelConfig) -> int:
+    kinds = cfg.layer_kinds()
+    L = len(kinds)
+    for p in range(1, L + 1):
+        if L % p == 0 and all(kinds[i] == kinds[i % p] for i in range(L)):
+            return p
+    return L
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def _init_block_pos(cfg: ModelConfig, key, kind: Tuple[str, str]) -> Params:
+    mixer_kind, mlp_kind = kind
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": layers.init_norm(cfg)}
+    if mixer_kind == "attn":
+        p["attn"] = layers.init_attention(cfg, ks[0])
+    else:
+        p["ssm"] = ssm.init_ssm(cfg, ks[0])
+    if mlp_kind != "none" and not cfg.parallel_block:
+        p["norm2"] = layers.init_norm(cfg)
+    if mlp_kind == "dense":
+        p["mlp"] = layers.init_mlp(cfg, ks[1])
+    elif mlp_kind == "moe":
+        p["moe"] = moe.init_moe(cfg, ks[1])
+    return p
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    P = pattern_length(cfg)
+    N = cfg.num_layers // P
+    kinds = cfg.layer_kinds()[:P]
+    ks = jax.random.split(key, P + 2)
+
+    blocks: List[Params] = []
+    for pos in range(P):
+        group_keys = jax.random.split(ks[pos], N)
+        blocks.append(jax.vmap(lambda k: _init_block_pos(cfg, k, kinds[pos]))(group_keys))
+
+    v, d = cfg.padded_vocab, cfg.d_model
+    params: Params = {
+        "embed": (jax.random.normal(ks[P], (v, d), jnp.float32) * 0.02).astype(
+            jnp.bfloat16
+        ),
+        "blocks": blocks,
+        "final_norm": layers.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(ks[P + 1], (d, v), jnp.float32) / (d**0.5)
+        ).astype(jnp.bfloat16)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# mixers with cache plumbing
+# --------------------------------------------------------------------------- #
+def quant_kv(x: jax.Array):
+    """(…, KVH, hd) -> (int8 values, f32 scales over the hd dim)."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(m, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequant_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(jnp.bfloat16)
+
+
+def _ring_width(cfg: ModelConfig, smax: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(smax, cfg.sliding_window)
+    return smax
+
+
+def _attn_mixer(
+    cfg: ModelConfig,
+    p: Params,
+    h: jax.Array,
+    positions: jax.Array,
+    mode: str,
+    cache: Optional[Params],
+    cache_len: Optional[jax.Array],
+    smax: int,
+):
+    if mode == "full":
+        return layers.self_attention(cfg, p, h, positions), None
+
+    if mode == "prefill":
+        q, k, v = layers.qkv_proj(cfg, p, h, positions)
+        o = ops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
+        B, S = h.shape[0], h.shape[1]
+        W = _ring_width(cfg, smax)
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        kc = jnp.zeros((B, W, kvh, hd), k.dtype)
+        vc = jnp.zeros((B, W, kvh, hd), v.dtype)
+        if S >= W:  # keep the last W tokens (ring-aligned slots pos % W)
+            slot = jnp.arange(S - W, S) % W
+            kc = kc.at[:, slot].set(k[:, S - W :])
+            vc = vc.at[:, slot].set(v[:, S - W :])
+        else:
+            kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+        if cfg.kv_quant:
+            kq, ks = quant_kv(kc)
+            vq, vs = quant_kv(vc)
+            return layers.out_proj(cfg, p, o), {
+                "k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        return layers.out_proj(cfg, p, o), {"k": kc, "v": vc}
+
+    # decode
+    assert cache is not None and cache_len is not None
+    B = h.shape[0]
+    q, k_new, v_new = layers.qkv_proj(cfg, p, h, cache_len[:, None])
+    if cfg.kv_quant:
+        return _decode_quant(cfg, p, q, k_new, v_new, cache, cache_len)
+    kc, vc = cache["k"], cache["v"]
+    W = kc.shape[1]
+    ring = cfg.sliding_window is not None and W <= cfg.sliding_window
+    slot = cache_len % W if ring else cache_len
+    # masked write instead of a dynamic scatter: elementwise select keeps
+    # the seq-sharded cache fully in place under GSPMD (a scatter at a
+    # traced index made the partitioner all-gather the cache every step —
+    # §Perf A-it2); costs one cache read+write of HBM locally, zero wire.
+    sel = (jax.lax.broadcasted_iota(jnp.int32, (B, W), 1)
+           == slot[:, None])[..., None, None]
+    kc = jnp.where(sel, k_new[:, 0][:, None], kc)
+    vc = jnp.where(sel, v_new[:, 0][:, None], vc)
+    # pin the updated cache to its resident layout (batch x seq-over-model)
+    kc = constrain(kc, "dp", "tp", None, None)
+    vc = constrain(vc, "dp", "tp", None, None)
+    if ring:
+        eff_len = jnp.minimum(cache_len + 1, W)
+        o, _ = ops.decode_attention(q[:, 0], kc, vc, eff_len, window=None)
+    else:
+        o, _ = ops.decode_attention(
+            q[:, 0], kc, vc, cache_len + 1, window=cfg.sliding_window
+        )
+    return layers.out_proj(cfg, p, o)[:, None], {"k": kc, "v": vc}
+
+
+def _decode_quant(cfg, p, q, k_new, v_new, cache, cache_len):
+    """int8-cache decode step: quantize the new slot, dequantize the cache
+    for the ref attention (the Pallas kernel dequantizes per tile instead)."""
+    B = q.shape[0]
+    kq, vq = cache["k"], cache["v"]
+    ks, vs = cache["k_scale"], cache["v_scale"]
+    W = kq.shape[1]
+    ring = cfg.sliding_window is not None and W <= cfg.sliding_window
+    slot = cache_len % W if ring else cache_len
+    kq_new, ks_new = quant_kv(k_new[:, 0])
+    vq_new, vs_new = quant_kv(v_new[:, 0])
+    sel = (jax.lax.broadcasted_iota(jnp.int32, (B, W), 1)
+           == slot[:, None])
+    sel4 = sel[..., None, None]
+    kq = jnp.where(sel4, kq_new[:, None], kq)
+    vq = jnp.where(sel4, vq_new[:, None], vq)
+    ks = jnp.where(sel[..., None], ks_new[:, None], ks)
+    vs = jnp.where(sel[..., None], vs_new[:, None], vs)
+    kc = dequant_kv(kq, ks)
+    vc = dequant_kv(vq, vs)
+    if ring:
+        eff_len = jnp.minimum(cache_len + 1, W)
+        o, _ = ops.decode_attention(q[:, 0], kc, vc, eff_len, window=None)
+    else:
+        o, _ = ops.decode_attention(
+            q[:, 0], kc, vc, cache_len + 1, window=cfg.sliding_window)
+    new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return layers.out_proj(cfg, p, o)[:, None], new_cache
+
+
+def _ssm_mixer(cfg, p, h, mode, cache):
+    if mode == "full":
+        return ssm.apply_ssm(cfg, p, h), None
+    if mode == "prefill":
+        out, state = ssm.apply_ssm(cfg, p, h, return_state=True)
+        return out, state
+    out, state = ssm.apply_ssm_decode(cfg, p, h, cache)
+    return out, state
+
+
+def _apply_block(
+    cfg: ModelConfig,
+    p: Params,
+    kind: Tuple[str, str],
+    h: jax.Array,
+    positions: Optional[jax.Array],
+    mode: str,
+    cache: Optional[Params],
+    cache_len: Optional[jax.Array],
+    smax: int,
+):
+    mixer_kind, mlp_kind = kind
+    hn = layers.apply_norm(cfg, p["norm1"], h)
+    if mixer_kind == "attn":
+        mix_out, new_cache = _attn_mixer(cfg, p["attn"], hn, positions, mode, cache, cache_len, smax)
+    else:
+        mix_out, new_cache = _ssm_mixer(cfg, p["ssm"], hn, mode, cache)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        if mlp_kind == "dense":
+            mlp_out = layers.apply_mlp(cfg, p["mlp"], hn)
+        elif mlp_kind == "moe":
+            mlp_out, aux = moe.apply_moe(cfg, p["moe"], hn)
+        else:
+            mlp_out = 0.0
+        return h + mix_out + mlp_out, aux, new_cache
+
+    h = h + mix_out
+    if mlp_kind != "none":
+        hn2 = layers.apply_norm(cfg, p["norm2"], h)
+        if mlp_kind == "dense":
+            h = h + layers.apply_mlp(cfg, p["mlp"], hn2)
+        else:
+            mlp_out, aux = moe.apply_moe(cfg, p["moe"], hn2)
+            h = h + mlp_out
+    return h, aux, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# backbone: scan over groups, pattern positions unrolled in the body
+# --------------------------------------------------------------------------- #
+def backbone(
+    cfg: ModelConfig,
+    params: Params,
+    h: jax.Array,
+    positions: Optional[jax.Array],
+    *,
+    mode: str = "full",
+    caches: Optional[List[Any]] = None,
+    cache_len: Optional[jax.Array] = None,
+    smax: int = 0,
+    remat: bool = False,
+    unroll: bool = False,
+):
+    """Returns (h, aux_sum, new_caches).
+
+    ``unroll=True`` replaces the layer-group scan with a Python loop: same
+    math, explicit per-layer HLO. Used by the dry-run so cost_analysis()
+    counts every layer (XLA prices a while-loop body once) — and by perf
+    variants trading compile time for scheduling freedom."""
+    P = pattern_length(cfg)
+    kinds = cfg.layer_kinds()[:P]
+    blocks = params["blocks"]  # list over positions, each stacked over groups
+
+    def body(carry, xs):
+        h, aux = carry
+        group_params, group_caches = xs
+        new_caches = []
+        for pos in range(P):
+            c_in = None if group_caches is None else group_caches[pos]
+            h, a, c_out = _apply_block(
+                cfg, group_params[pos], kinds[pos],
+                h, positions, mode, c_in, cache_len, smax,
+            )
+            # sequence-parallel residual stream (Megatron-SP): between
+            # blocks the seq dim shards over `model`, so the out-proj's TP
+            # all-reduce lowers to a reduce-scatter (+ all-gather at the next
+            # block's QKV). REPRO_SP=0 restores the baseline arm.
+            h = constrain(h, *residual_entries())
+            aux = aux + a
+            new_caches.append(c_out)
+        if all(c is None for c in new_caches):
+            return (h, aux), None
+        return (h, aux), new_caches
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    carry0 = (h, jnp.zeros((), jnp.float32))
+    if unroll:
+        N = cfg.num_layers // P
+        carry = carry0
+        ys = []
+        for i in range(N):
+            xs_i = jax.tree.map(lambda t: t[i], (blocks, caches))
+            carry, y = body(carry, xs_i)
+            ys.append(y)
+        (h, aux) = carry
+        if ys[0] is None:
+            new_caches = None
+        else:
+            new_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    else:
+        (h, aux), new_caches = jax.lax.scan(body, carry0, (blocks, caches))
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    return h, aux, new_caches
+
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)
+    return constrain(h, "dp", None, None)
+
+
+def _head_matrix(cfg: ModelConfig, params: Params) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def assemble_input(
+    cfg: ModelConfig, params: Params, tokens: jax.Array,
+    prefix_embeds: Optional[jax.Array],
+) -> jax.Array:
+    """Token embeddings, with modality prefix embeddings concatenated ahead
+    (VLM patches / audio frames per the assignment's frontend stub)."""
+    h = embed_tokens(cfg, params, tokens)
+    if prefix_embeds is not None and cfg.num_prefix_embeds > 1:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    return h
+
+
+# --------------------------------------------------------------------------- #
+# chunked CE loss / logprobs (never materializes (B,S,V))
+# --------------------------------------------------------------------------- #
+def _chunked_head_scan(h, w_head, labels, chunk, vocab_size=None, unroll=False):
+    """scan over sequence chunks; returns per-position (logprob, entropy, mask)."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=IGNORE)
+    nc = h.shape[1] // chunk
+    hc = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    vpad = w_head.shape[1]
+    vmask = None
+    if vocab_size is not None and vocab_size < vpad:
+        vmask = jnp.arange(vpad) < vocab_size
+    # gather the FSDP-sharded head once, keep it vocab-TP for the chunk loop
+    w_head = constrain(w_head, None, "tp")
+
+    @jax.checkpoint
+    def body(_, xs):
+        hx, lx = xs
+        logits = (hx @ w_head).astype(jnp.float32)  # (B, chunk, V)
+        logits = constrain(logits, "dp", None, "tp")
+        if vmask is not None:  # exclude padded vocab slots (match sampling)
+            logits = jnp.where(vmask, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tok = jnp.take_along_axis(
+            logits, jnp.maximum(lx, 0)[..., None], axis=-1
+        )[..., 0]
+        logprob = tok - logz
+        probs = jax.nn.softmax(logits, axis=-1)
+        entropy = logz - jnp.sum(probs * logits, axis=-1)
+        return (), (logprob, entropy, (lx != IGNORE))
+
+    if unroll:
+        outs = [body((), (hc[i], lc[i]))[1] for i in range(nc)]
+        lp, ent, mask = (jnp.stack(ts) for ts in zip(*outs))
+    else:
+        _, (lp, ent, mask) = jax.lax.scan(body, (), (hc, lc))
+    fix = lambda t: jnp.moveaxis(t, 0, 1).reshape(B, -1)[:, :S]
+    return fix(lp), fix(ent), fix(mask)
+
+
+def token_stats(cfg, params, h, labels, chunk=LOSS_CHUNK, unroll=False):
+    return _chunked_head_scan(
+        h, _head_matrix(cfg, params), labels, chunk, vocab_size=cfg.vocab_size,
+        unroll=unroll,
+    )
+
+
+def ce_loss(cfg, params, h, labels, unroll=False):
+    lp, ent, mask = token_stats(cfg, params, h, labels, unroll=unroll)
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    loss = -jnp.sum(lp * mask) / denom
+    return loss, {"ce": loss, "entropy": jnp.sum(ent * mask) / denom}
+
+
+# --------------------------------------------------------------------------- #
+# public entry points
+# --------------------------------------------------------------------------- #
+def loss_fn(
+    cfg: ModelConfig,
+    params: Params,
+    batch: Dict[str, jax.Array],
+    *,
+    remat: bool = True,
+    unroll: bool = False,
+):
+    """LM training loss. batch: tokens (B,St) [, prefix_embeds (B,P,d)],
+    labels (B, P+St) with IGNORE at non-predicted positions."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    h = assemble_input(cfg, params, tokens, prefix)
+    positions = jnp.arange(h.shape[1])[None, :]
+    h, aux, _ = backbone(cfg, params, h, positions, mode="full", remat=remat,
+                         unroll=unroll)
+    loss, metrics = ce_loss(cfg, params, h, batch["labels"], unroll=unroll)
+    if cfg.num_experts:
+        loss = loss + 0.01 * aux
+        metrics["moe_aux"] = aux
+    return loss, metrics
+
+
+def logprobs_fn(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    *,
+    prefix_embeds: Optional[jax.Array] = None,
+    remat: bool = False,
+    unroll: bool = False,
+):
+    """Per-token logprob + entropy of ``tokens`` under the model (RL eval).
+
+    Returns (logprob, entropy) each (B, S): position i scores tokens[:, i]
+    given tokens[:, :i] (position 0 gets 0)."""
+    h = assemble_input(cfg, params, tokens, prefix_embeds)
+    positions = jnp.arange(h.shape[1])[None, :]
+    h, _, _ = backbone(cfg, params, h, positions, mode="full", remat=remat,
+                       unroll=unroll)
+    offset = h.shape[1] - tokens.shape[1]  # prefix length
+    labels = tokens[:, 1:]
+    h_pred = h[:, offset : offset + tokens.shape[1] - 1]
+    lp, ent, _ = token_stats(cfg, params, h_pred, labels)
+    zero = jnp.zeros((tokens.shape[0], 1), lp.dtype)
+    return (
+        jnp.concatenate([zero, lp], axis=1),
+        jnp.concatenate([zero, ent], axis=1),
+    )
+
+
+def init_caches(cfg: ModelConfig, batch: int, smax: int):
+    """Zero caches (one entry per pattern position, stacked over groups)."""
+    P = pattern_length(cfg)
+    N = cfg.num_layers // P
+    kinds = cfg.layer_kinds()[:P]
+    W = _ring_width(cfg, smax)
+    caches = []
+    for pos in range(P):
+        if kinds[pos][0] == "attn":
+            kvh, hd = cfg.num_kv_heads, cfg.head_dim
+            if cfg.kv_quant:
+                caches.append(
+                    {
+                        "k": jnp.zeros((N, batch, W, kvh, hd), jnp.int8),
+                        "v": jnp.zeros((N, batch, W, kvh, hd), jnp.int8),
+                        "k_scale": jnp.zeros((N, batch, W, kvh), jnp.float32),
+                        "v_scale": jnp.zeros((N, batch, W, kvh), jnp.float32),
+                    }
+                )
+            else:
+                caches.append(
+                    {
+                        "k": jnp.zeros((N, batch, W, kvh, hd), jnp.bfloat16),
+                        "v": jnp.zeros((N, batch, W, kvh, hd), jnp.bfloat16),
+                    }
+                )
+        else:
+            shapes = ssm.ssm_state_shapes(cfg, batch)
+            caches.append(
+                {k: jnp.zeros((N,) + s.shape, s.dtype) for k, s in shapes.items()}
+            )
+    return caches
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    *,
+    smax: int,
+    prefix_embeds: Optional[jax.Array] = None,
+    unroll: bool = False,
+):
+    """Run the prompt, return (last-position logits, caches, cache_len)."""
+    h = assemble_input(cfg, params, tokens, prefix_embeds)
+    positions = jnp.arange(h.shape[1])[None, :]
+    h, _, caches = backbone(
+        cfg, params, h, positions, mode="prefill", smax=smax, unroll=unroll
+    )
+    logits = (h[:, -1] @ _head_matrix(cfg, params)).astype(jnp.float32)
+    logits = mask_padded_vocab(cfg, logits)
+    cache_len = jnp.full((tokens.shape[0],), h.shape[1], jnp.int32)
+    return logits, caches, cache_len
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,  # (B,) or (B,1)
+    caches,
+    cache_len: jax.Array,  # (B,)
+    unroll: bool = False,
+):
+    """One decode step. Returns (logits (B,V), new_caches, cache_len+1)."""
+    token = token.reshape(-1, 1)
+    h = embed_tokens(cfg, params, token)
+    h, _, new_caches = backbone(
+        cfg, params, h, None, mode="decode", caches=caches, cache_len=cache_len,
+        smax=0, unroll=unroll,
+    )
+    logits = (h[:, 0] @ _head_matrix(cfg, params)).astype(jnp.float32)
+    logits = mask_padded_vocab(cfg, logits)
+    return logits, new_caches, cache_len + 1
+
+
+def mask_padded_vocab(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    v = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(v, logits, -1e30)

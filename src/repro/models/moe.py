@@ -1,0 +1,122 @@
+"""Mixture-of-Experts MLP (mixtral / granite / jamba).
+
+Expert weights are stacked (E, d, f) so a single einsum carries all experts —
+the GSPMD-friendly dense token-choice formulation: every token is dispatched
+to its top-k experts with a one-hot combine. On the production mesh, `f` is
+TP-sharded over `model` ("expert tensor parallelism"; E = 8/16/40 are not
+16-divisible, see DESIGN.md §6) and `E` is FSDP-sharded over `data` where
+divisible.
+
+Router uses fp32 logits + softmax-renormalized top-k gates (mixtral style).
+An auxiliary load-balancing loss (Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.constraint import constrain
+
+Params = Dict[str, Any]
+
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / (d**0.5)
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    p: Params = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * scale),
+        "w_in": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(jnp.bfloat16),
+        "w_out": (jax.random.normal(ks[2], (e, f, d), jnp.float32) * (1.0 / f**0.5)).astype(jnp.bfloat16),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, f), jnp.float32) * scale).astype(jnp.bfloat16)
+    return p
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (out (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    xt = x.reshape(B * S, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])  # (T, E) fp32
+    logits = constrain(logits, "dp", None)  # keep tokens batch-sharded
+    gates, idx = jax.lax.top_k(logits, k)  # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)  # renormalize over the chosen k
+
+    # combine weights (T, E): sum of one-hots scaled by gate
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (T, k, E)
+    combine = jnp.einsum("tk,tke->te", gates, onehot)  # (T, E)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    density = jnp.mean(onehot.sum(axis=1), axis=0)  # fraction routed per expert
+    p_mean = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(density * p_mean)
+
+    # dense dispatch: every expert sees all tokens, combine masks the output.
+    # (capacity-free and exactly load-balanced across devices; the top-k
+    # sparsity is recovered in FLOP accounting as 6*N_active*D — see roofline.)
+    h = jnp.einsum("td,edf->etf", xt, p["w_in"])
+    h = constrain(h, None, "dp", "tp")
+    if "w_gate" in p:
+        g = jnp.einsum("td,edf->etf", xt, p["w_gate"])
+        g = constrain(g, None, "dp", "tp")
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g, approximate=True)
+        h = act * h
+    elif cfg.mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    # Fold the top-k gates into h BEFORE the output contraction:
+    #   out_td = sum_e c_te sum_f h_etf W_efd = sum_{e,f} (c_te h_etf) W_efd
+    # so the (E,T,d) per-expert outputs are never materialized and the TP
+    # all-reduce shrinks from (E,T,d) to (T,d) — E x less wire (§Perf, cell B).
+    h = h * jnp.swapaxes(combine, 0, 1)[:, :, None].astype(h.dtype)
+    # bf16 output on the TP-reduced contraction: the (T,d) partial sums cross
+    # the wire in bf16, not the f32 accumulator dtype (halves the all-reduce;
+    # on TPU the MXU still accumulates in f32 internally)
+    out = jnp.einsum("etf,efd->td", h, p["w_out"],
+                     preferred_element_type=jnp.bfloat16)
+    out = constrain(out, "dp", None)
+    return out.reshape(B, S, d), aux
+
+
+def apply_moe_topk_sparse(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Gather-based sparse dispatch: only top-k experts' FLOPs per token.
+
+    Used on small/serving paths (and CPU examples) where the (T,k) gather is
+    cheaper than the dense all-experts einsum. Identical output to
+    :func:`apply_moe` (tested).
+    """
+    B, S, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    xt = x.reshape(B * S, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    gates, idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    w_in = p["w_in"][idx]  # (T, k, d, f)
+    w_out = p["w_out"][idx]  # (T, k, f, d)
+    h = jnp.einsum("td,tkdf->tkf", xt, w_in)
+    if "w_gate" in p:
+        g = jnp.einsum("td,tkdf->tkf", xt, p["w_gate"][idx])
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g, approximate=True)
+        h = act * h
+    elif cfg.mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    y = jnp.einsum("tkf,tkfd->tkd", h, w_out)
+    out = jnp.einsum("tkd,tk->td", y, gates.astype(y.dtype))
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+    density = jnp.mean(onehot.sum(axis=1), axis=0)
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=0))
+    return out.reshape(B, S, d), aux

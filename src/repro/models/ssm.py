@@ -1,0 +1,167 @@
+"""Mamba2 (SSD) mixer block.
+
+Projections follow the Mamba2 layout: in_proj fans out to (z, x, B, C, dt);
+a short depthwise causal conv over the (x, B, C) stream; the SSD core (Pallas
+kernel on TPU); a gated RMSNorm; out_proj back to d_model.
+
+TP sharding: x/z/dt/A/D/head-dims shard over `model` (nheads divisible by 16
+for all assigned archs); the B/C stream (ngroups * d_state channels) is
+replicated — it is tiny (<= 256 channels). The conv is split into conv_x
+(sharded) and conv_bc (replicated) accordingly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.constraint import constrain
+from repro.kernels import ops
+
+Params = Dict[str, Any]
+
+
+def init_ssm(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    din, g, n, nh = cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    kw = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    scale = 1.0 / (d**0.5)
+
+    def w(key_, shape, s=scale):
+        return (jax.random.normal(key_, shape, jnp.float32) * s).astype(jnp.bfloat16)
+
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 init)
+    dt = jnp.exp(
+        jax.random.uniform(ks[6], (nh,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+
+    return {
+        "w_z": w(ks[0], (d, din)),
+        "w_x": w(ks[1], (d, din)),
+        "w_B": w(ks[2], (d, g * n)),
+        "w_C": w(ks[3], (d, g * n)),
+        "w_dt": w(ks[4], (d, nh)),
+        "conv_x": w(ks[5], (kw, din), s=1.0 / kw),
+        "conv_bc": w(ks[7], (kw, 2 * g * n), s=1.0 / kw),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),  # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_w": jnp.zeros((din,), jnp.float32),
+        "w_out": w(jax.random.fold_in(key, 99), (din, d), s=1.0 / (din**0.5)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x (B,S,C); w (K,C); state (B,K-1,C) or None.
+
+    Returns (y (B,S,C), new_state (B,K-1,C)).
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1) :] if K > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+def apply_ssm(
+    cfg: ModelConfig,
+    p: Params,
+    u: jax.Array,  # (B, S, d)
+    *,
+    return_state: bool = False,
+):
+    """Full-sequence SSD mixer (train / prefill)."""
+    B, S, _ = u.shape
+    din, g, n, nh, hd = (
+        cfg.ssm_d_inner,
+        cfg.ssm_ngroups,
+        cfg.ssm_state,
+        cfg.ssm_nheads,
+        cfg.ssm_headdim,
+    )
+    z = constrain(u @ p["w_z"], "dp", None, "tp")
+    x = constrain(u @ p["w_x"], "dp", None, "tp")
+    bc = jnp.concatenate([u @ p["w_B"], u @ p["w_C"]], axis=-1)
+    dt = jax.nn.softplus(
+        (u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )
+    dt = constrain(dt, "dp", None, "tp")
+
+    x, conv_x_state = _causal_conv(x, p["conv_x"])
+    bc, conv_bc_state = _causal_conv(bc, p["conv_bc"])
+    x = jax.nn.silu(x)
+    bc = jax.nn.silu(bc)
+    Bm = bc[..., : g * n].reshape(B, S, g, n)
+    Cm = bc[..., g * n :].reshape(B, S, g, n)
+
+    xh = x.reshape(B, S, nh, hd)
+    A = -jnp.exp(p["A_log"])
+    y, h = ops.ssd(xh, dt, A, Bm, Cm, p["D"], return_state=True)
+    y = y.reshape(B, S, din)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = ops.rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["w_out"]
+    if return_state:
+        return out, {"ssm": h, "conv_x": conv_x_state, "conv_bc": conv_bc_state}
+    return out
+
+
+def ssm_state_shapes(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStructs for one layer's decode state."""
+    din, g, n, nh, hd = (
+        cfg.ssm_d_inner,
+        cfg.ssm_ngroups,
+        cfg.ssm_state,
+        cfg.ssm_nheads,
+        cfg.ssm_headdim,
+    )
+    kw = cfg.ssm_conv
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, nh, hd, n), jnp.float32),
+        "conv_x": jax.ShapeDtypeStruct((batch, kw - 1, din), jnp.bfloat16),
+        "conv_bc": jax.ShapeDtypeStruct((batch, kw - 1, 2 * g * n), jnp.bfloat16),
+    }
+
+
+def apply_ssm_decode(
+    cfg: ModelConfig, p: Params, u: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token SSD step. u (B, 1, d); state from prefill/init."""
+    B = u.shape[0]
+    din, g, n, nh, hd = (
+        cfg.ssm_d_inner,
+        cfg.ssm_ngroups,
+        cfg.ssm_state,
+        cfg.ssm_nheads,
+        cfg.ssm_headdim,
+    )
+    z = u @ p["w_z"]
+    x = u @ p["w_x"]
+    bc = jnp.concatenate([u @ p["w_B"], u @ p["w_C"]], axis=-1)
+    dt = jax.nn.softplus(
+        (u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )
+
+    x, conv_x_state = _causal_conv(x, p["conv_x"], state["conv_x"])
+    bc, conv_bc_state = _causal_conv(bc, p["conv_bc"], state["conv_bc"])
+    x = jax.nn.silu(x)
+    bc = jax.nn.silu(bc)
+    Bm = bc[:, 0, : g * n].reshape(B, g, n)
+    Cm = bc[:, 0, g * n :].reshape(B, g, n)
+
+    xh = x[:, 0].reshape(B, nh, hd)
+    A = -jnp.exp(p["A_log"])
+    y, h = ops.ssd_decode_step(xh, dt[:, 0], A, Bm, Cm, p["D"], state["ssm"])
+    y = y.reshape(B, 1, din)
+    y = ops.rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["w_out"]
+    return out, {"ssm": h, "conv_x": conv_x_state, "conv_bc": conv_bc_state}

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (
+    AdamWState,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    init,
+    update,
+)

@@ -1,0 +1,1 @@
+from repro.rl.trainer import RLConfig, TrainState, init_state

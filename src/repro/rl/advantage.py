@@ -1,0 +1,67 @@
+"""Advantage estimators: GAE (PPO) and group-relative (GRPO) — paper Fig. 1."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gae(
+    rewards: jax.Array,  # (B, T) per-token rewards (sparse terminal + KL shaping)
+    values: jax.Array,  # (B, T) value estimates
+    mask: jax.Array,  # (B, T) 1 on generated tokens
+    *,
+    gamma: float = 1.0,
+    lam: float = 0.95,
+):
+    """Generalized advantage estimation over the response tokens.
+
+    Returns (advantages (B,T), returns (B,T)). The sequence terminates at the
+    last masked position; bootstrap value beyond it is 0.
+    """
+    B, T = rewards.shape
+    mask = mask.astype(jnp.float32)
+    # v_{t+1} masked: 0 beyond the response
+    v_next = jnp.concatenate([values[:, 1:], jnp.zeros((B, 1))], axis=1) * mask
+    deltas = (rewards + gamma * v_next - values) * mask
+
+    def scan_fn(carry, x):
+        delta_t, m_t = x
+        carry = delta_t + gamma * lam * m_t * carry
+        return carry, carry
+
+    # right-to-left scan
+    _, adv_rev = jax.lax.scan(
+        scan_fn,
+        jnp.zeros((B,)),
+        (jnp.moveaxis(deltas, 1, 0)[::-1], jnp.moveaxis(mask, 1, 0)[::-1]),
+    )
+    adv = jnp.moveaxis(adv_rev[::-1], 0, 1) * mask
+    returns = adv + values * mask
+    return adv, returns
+
+
+def grpo(
+    rewards: jax.Array,  # (B,) scalar reward per sequence
+    mask: jax.Array,  # (B, T)
+    *,
+    group_size: int,
+    eps: float = 1e-6,
+):
+    """Group-relative advantages: normalize each sequence's reward by its
+    prompt-group statistics, broadcast over response tokens."""
+    B = rewards.shape[0]
+    assert B % group_size == 0, (B, group_size)
+    g = rewards.reshape(B // group_size, group_size)
+    mean = jnp.mean(g, axis=1, keepdims=True)
+    std = jnp.std(g, axis=1, keepdims=True)
+    adv = ((g - mean) / (std + eps)).reshape(B)
+    return adv[:, None] * mask.astype(jnp.float32)
+
+
+def whiten(adv: jax.Array, mask: jax.Array, eps: float = 1e-8) -> jax.Array:
+    """Batch-whiten advantages over masked positions (PPO stabilizer)."""
+    m = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    mean = jnp.sum(adv * m) / n
+    var = jnp.sum(jnp.square(adv - mean) * m) / n
+    return (adv - mean) * jax.lax.rsqrt(var + eps) * m

@@ -1,0 +1,30 @@
+"""Critic (value) model for PPO: shares the LM backbone machinery with a
+scalar value head — the paper's Critic Model (same size as the actor)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+def init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    backbone = lm.init(cfg, ks[0])
+    backbone.pop("lm_head", None)  # value model has no token head
+    return {
+        "backbone": backbone,
+        "v_head": (jax.random.normal(ks[1], (cfg.d_model, 1), jnp.float32) * 0.01),
+    }
+
+
+def values_fn(cfg: ModelConfig, params, tokens: jax.Array, *, remat: bool = False):
+    """Token values (B, S) fp32."""
+    h = lm.embed_tokens(cfg, params["backbone"], tokens)
+    positions = jnp.arange(h.shape[1])[None, :]
+    h, _, _ = lm.backbone(cfg, params["backbone"], h, positions, mode="full", remat=remat)
+    v = (h.astype(jnp.float32) @ params["v_head"])[..., 0]
+    return v

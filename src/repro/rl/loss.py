@@ -1,0 +1,81 @@
+"""RL objectives: PPO clipped policy loss, GRPO loss, clipped value loss.
+
+All losses are token-level means over the response mask, matching the verl /
+DistFlow conventions (Fig. 1 nodes ACTOR_TRAIN / CRITIC_TRAIN).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _masked_mean(x, mask):
+    m = mask.astype(jnp.float32)
+    return jnp.sum(x * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def ppo_policy_loss(
+    logprob: jax.Array,  # (B,T) under the current policy
+    old_logprob: jax.Array,  # (B,T) behaviour policy (rollout)
+    advantages: jax.Array,  # (B,T)
+    mask: jax.Array,  # (B,T)
+    *,
+    clip_eps: float = 0.2,
+) -> Dict[str, jax.Array]:
+    ratio = jnp.exp(logprob - old_logprob)
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    surrogate = jnp.minimum(ratio * advantages, clipped * advantages)
+    loss = -_masked_mean(surrogate, mask)
+    clipfrac = _masked_mean((jnp.abs(ratio - 1.0) > clip_eps).astype(jnp.float32), mask)
+    approx_kl = _masked_mean(old_logprob - logprob, mask)
+    return {"loss": loss, "clipfrac": clipfrac, "approx_kl": approx_kl,
+            "ratio_mean": _masked_mean(ratio, mask)}
+
+
+def kl_penalty(
+    logprob: jax.Array, ref_logprob: jax.Array, mask: jax.Array, *, kind: str = "k3"
+) -> jax.Array:
+    """Per-token KL(π‖π_ref) estimator. k3 (Schulman) is low-variance and
+    non-negative: exp(Δ) - Δ - 1 with Δ = ref - π."""
+    delta = ref_logprob - logprob
+    if kind == "k1":
+        kl = -delta
+    elif kind == "k2":
+        kl = 0.5 * jnp.square(delta)
+    else:  # k3
+        kl = jnp.exp(delta) - delta - 1.0
+    return _masked_mean(kl, mask)
+
+
+def grpo_loss(
+    logprob,
+    old_logprob,
+    ref_logprob,
+    advantages,
+    mask,
+    *,
+    clip_eps: float = 0.2,
+    kl_coef: float = 0.001,
+) -> Dict[str, jax.Array]:
+    out = ppo_policy_loss(logprob, old_logprob, advantages, mask, clip_eps=clip_eps)
+    kl = kl_penalty(logprob, ref_logprob, mask, kind="k3")
+    out["kl"] = kl
+    out["loss"] = out["loss"] + kl_coef * kl
+    return out
+
+
+def value_loss(
+    values,  # (B,T) current critic
+    old_values,  # (B,T) rollout-time critic
+    returns,  # (B,T) GAE returns
+    mask,
+    *,
+    clip_eps: float = 0.2,
+) -> Dict[str, jax.Array]:
+    v_clip = old_values + jnp.clip(values - old_values, -clip_eps, clip_eps)
+    l1 = jnp.square(values - returns)
+    l2 = jnp.square(v_clip - returns)
+    loss = 0.5 * _masked_mean(jnp.maximum(l1, l2), mask)
+    return {"loss": loss, "value_err": _masked_mean(jnp.abs(values - returns), mask)}

@@ -1,0 +1,90 @@
+"""Autoregressive rollout engine (the paper's vLLM-equivalent generation
+stage, as a first-class JAX engine).
+
+Generation = prefill(prompt) + ``lax.scan`` over decode steps with temperature
+sampling; finished rows (EOS) keep emitting pad but stop counting. Returns the
+full sequences, the response mask, and the behaviour-policy logprobs used as
+``old_logprob`` by PPO/GRPO.
+
+Fixed-shape by construction (prompt_len and max_new are static), so one
+compiled executable serves every iteration — and the *iteration* cost is
+max-len bounded, which is the straggler-mitigation story of DESIGN.md §9.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+
+
+class RolloutResult(NamedTuple):
+    tokens: jax.Array  # (B, Lp + T) prompt + response (pad after EOS)
+    response_mask: jax.Array  # (B, Lp + T) 1 on counted response tokens
+    old_logprob: jax.Array  # (B, Lp + T) behaviour logprobs (0 on prompt)
+    lengths: jax.Array  # (B,) response lengths
+
+
+def sample_token(logits: jax.Array, key, temperature: float) -> jax.Array:
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(
+    model: Model,
+    params,
+    prompt: jax.Array,  # (B, Lp) fixed-length prompts
+    key: jax.Array,
+    *,
+    max_new: int,
+    temperature: float = 1.0,
+    eos_id: Optional[int] = None,
+    pad_id: int = 0,
+    frames: Optional[jax.Array] = None,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> RolloutResult:
+    B, Lp = prompt.shape
+    smax = Lp + max_new
+    kw = {}
+    if frames is not None:
+        kw["frames"] = frames
+    if prefix_embeds is not None:
+        kw["prefix_embeds"] = prefix_embeds
+    logits, caches, cache_len = model.prefill(params, prompt, smax=smax, **kw)
+
+    k0, key = jax.random.split(key)
+    tok0 = sample_token(logits, k0, temperature)
+    lp0 = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(B), tok0]
+
+    def body(carry, step_key):
+        tok, caches, cache_len, done = carry
+        logits, caches, cache_len = model.decode_step(params, tok, caches, cache_len)
+        nxt = sample_token(logits, step_key, temperature)
+        lp = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(B), nxt]
+        nxt = jnp.where(done, pad_id, nxt)
+        lp = jnp.where(done, 0.0, lp)
+        new_done = done | ((nxt == eos_id) if eos_id is not None else False)
+        return (nxt, caches, cache_len, new_done), (nxt, lp, done)
+
+    done0 = (tok0 == eos_id) if eos_id is not None else jnp.zeros((B,), bool)
+    step_keys = jax.random.split(key, max_new - 1)
+    (_, _, _, _), (toks, lps, dones) = jax.lax.scan(
+        body, (tok0, caches, cache_len, done0), step_keys
+    )
+    # assemble (B, T)
+    resp = jnp.concatenate([tok0[:, None], jnp.moveaxis(toks, 0, 1)], axis=1)
+    resp_lp = jnp.concatenate([lp0[:, None], jnp.moveaxis(lps, 0, 1)], axis=1)
+    was_done = jnp.concatenate(
+        [jnp.zeros((B, 1), bool), jnp.moveaxis(dones, 0, 1)], axis=1
+    )
+    resp_mask = ~was_done  # token emitted while not yet done counts (incl. EOS)
+
+    tokens = jnp.concatenate([prompt, resp], axis=1)
+    mask = jnp.concatenate([jnp.zeros((B, Lp), bool), resp_mask], axis=1)
+    old_lp = jnp.concatenate([jnp.zeros((B, Lp)), resp_lp * resp_mask], axis=1)
+    lengths = jnp.sum(resp_mask, axis=1)
+    return RolloutResult(tokens, mask, old_lp, lengths)

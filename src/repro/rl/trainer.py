@@ -1,0 +1,170 @@
+"""Actor / critic update steps (the DAG's MODEL_TRAIN nodes).
+
+Each step is a self-contained jit-able function: loss -> grad -> global-norm
+clip -> AdamW. The DistFlow registry binds these to (ACTOR, MODEL_TRAIN) and
+(CRITIC, MODEL_TRAIN) nodes; the launcher jits them with FSDP/TP shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.api import Model
+from repro.optim import adamw
+from repro.rl import critic as critic_mod
+from repro.rl import loss as losses
+
+
+@dataclasses.dataclass(frozen=True)
+class RLConfig:
+    algorithm: str = "grpo"  # grpo | ppo
+    lr: float = 1e-6
+    critic_lr: float = 1e-5
+    clip_eps: float = 0.2
+    kl_coef: float = 0.001
+    entropy_coef: float = 0.0
+    max_grad_norm: float = 1.0
+    gamma: float = 1.0
+    gae_lambda: float = 0.95
+    group_size: int = 8  # GRPO rollouts per prompt
+    temperature: float = 1.0
+    max_new_tokens: int = 16
+    weight_decay: float = 0.0
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def init_state(params) -> TrainState:
+    return TrainState(params=params, opt=adamw.init(params))
+
+
+def actor_loss_fn(
+    model: Model, rl: RLConfig, params, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    lp, ent = model.logprobs(params, batch["tokens"], remat=True)
+    mask = batch["response_mask"]
+    if rl.algorithm == "grpo":
+        out = losses.grpo_loss(
+            lp,
+            batch["old_logprob"],
+            batch["ref_logprob"],
+            batch["advantages"],
+            mask,
+            clip_eps=rl.clip_eps,
+            kl_coef=rl.kl_coef,
+        )
+    else:
+        out = losses.ppo_policy_loss(
+            lp, batch["old_logprob"], batch["advantages"], mask, clip_eps=rl.clip_eps
+        )
+    loss = out.pop("loss")
+    m = mask.astype(jnp.float32)
+    out["entropy"] = jnp.sum(ent * m) / jnp.maximum(jnp.sum(m), 1.0)
+    if rl.entropy_coef:
+        loss = loss - rl.entropy_coef * out["entropy"]
+    return loss, out
+
+
+def make_actor_step(model: Model, rl: RLConfig) -> Callable:
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: actor_loss_fn(model, rl, p, batch), has_aux=True
+        )(state.params)
+        grads, gnorm = adamw.clip_by_global_norm(grads, rl.max_grad_norm)
+        params, opt = adamw.update(
+            grads, state.opt, state.params, lr=rl.lr, weight_decay=rl.weight_decay
+        )
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return TrainState(params, opt), metrics
+
+    return step
+
+
+def make_critic_step(cfg: ModelConfig, rl: RLConfig) -> Callable:
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        def loss_fn(p):
+            v = critic_mod.values_fn(cfg, p, batch["tokens"], remat=True)
+            out = losses.value_loss(
+                v,
+                batch["old_values"],
+                batch["returns"],
+                batch["response_mask"],
+                clip_eps=rl.clip_eps,
+            )
+            return out.pop("loss"), out
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        grads, gnorm = adamw.clip_by_global_norm(grads, rl.max_grad_norm)
+        params, opt = adamw.update(
+            grads, state.opt, state.params, lr=rl.critic_lr
+        )
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return TrainState(params, opt), metrics
+
+    return step
+
+
+def make_actor_step_accumulated(model: Model, rl: RLConfig, *,
+                                num_microbatches: int) -> Callable:
+    """Gradient-accumulated actor update: the global batch is split into
+    microbatches scanned sequentially (grads averaged), bounding activation
+    memory at 1/num_microbatches while keeping the identical update — the
+    standard large-global-batch trick for the paper's 1024-per-node batches."""
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        B = batch["tokens"].shape[0]
+        assert B % num_microbatches == 0, (B, num_microbatches)
+        mb = B // num_microbatches
+
+        def slice_mb(i):
+            return jax.tree.map(
+                lambda t: jax.lax.dynamic_slice_in_dim(t, i * mb, mb, 0), batch
+            )
+
+        def body(carry, i):
+            grads_acc, loss_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: actor_loss_fn(model, rl, p, slice_mb(i)), has_aux=True
+            )(state.params)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / num_microbatches,
+                grads_acc, grads)
+            return (grads_acc, loss_acc + loss / num_microbatches), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+        (grads, loss), metrics = jax.lax.scan(
+            body, (zeros, jnp.zeros(())), jnp.arange(num_microbatches))
+        metrics = jax.tree.map(lambda m: m[-1], metrics)  # last microbatch
+        grads, gnorm = adamw.clip_by_global_norm(grads, rl.max_grad_norm)
+        params, opt = adamw.update(
+            grads, state.opt, state.params, lr=rl.lr,
+            weight_decay=rl.weight_decay)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return TrainState(params, opt), metrics
+
+    return step
+
+
+def make_lm_train_step(model: Model, *, lr: float = 3e-4, max_grad_norm: float = 1.0,
+                       unroll: bool = False):
+    """Plain LM CE train step — the dry-run's ``train_step`` workload and the
+    supervised arm of the framework."""
+
+    def step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, unroll=unroll), has_aux=True
+        )(state.params)
+        grads, gnorm = adamw.clip_by_global_norm(grads, max_grad_norm)
+        params, opt = adamw.update(grads, state.opt, state.params, lr=lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return TrainState(params, opt), metrics
+
+    return step

@@ -1,0 +1,107 @@
+"""HLO text analysis: collective operand bytes + cost-analysis plumbing.
+
+``cost_analysis()`` has no collective accounting, so §Roofline's collective
+term comes from parsing the post-SPMD stablehlo/HLO text: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op's operand
+sizes are summed, bucketed by op kind.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "i8": 1, "ui8": 1,
+    "s16": 2, "u16": 2, "i16": 2, "ui16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "i32": 4, "ui32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "i64": 8, "ui64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+    # stablehlo spellings
+    "all_gather", "all_reduce", "reduce_scatter", "all_to_all",
+    "collective_permute",
+)
+
+# matches e.g. "bf16[16,512,128]{...}" or "f32[256]"  (HLO text)
+_HLO_SHAPE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+# matches stablehlo "tensor<16x512x128xbf16>"
+_MLIR_SHAPE = re.compile(r"tensor<([0-9x]*?)x?(\w+)>")
+
+
+def _shape_bytes_hlo(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _shape_bytes_mlir(dims: str, dtype: str) -> int:
+    dt = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "i1": 1, "i8": 1,
+          "i16": 2, "i32": 4, "i64": 8, "ui8": 1, "ui32": 4}.get(dtype, 0)
+    n = 1
+    if dims:
+        for d in dims.split("x"):
+            if d:
+                n *= int(d)
+    return n * dt
+
+
+def collective_bytes(text: str) -> Dict:
+    """Sum *output* operand bytes of every collective op in HLO/MLIR text.
+
+    Output bytes approximate wire volume per device program: all-gather
+    output = full gathered tensor; all-reduce output = reduced tensor (2x on
+    wire for ring, we report raw and let the roofline apply the algo factor).
+    """
+    per_kind: Dict[str, int] = {}
+    count: Dict[str, int] = {}
+    for line in text.splitlines():
+        stripped = line.strip()
+        kind = None
+        for op in COLLECTIVE_OPS:
+            # HLO: "%x = bf16[...] all-gather(...)" / MLIR: "stablehlo.all_gather"
+            if f" {op}(" in stripped or f".{op}" in stripped or stripped.startswith(op):
+                kind = op.replace("_", "-")
+                break
+        if kind is None:
+            continue
+        nbytes = 0
+        m = _HLO_SHAPE.search(stripped)
+        if m and m.group(1) in _DTYPE_BYTES:
+            nbytes = _shape_bytes_hlo(m.group(1), m.group(2))
+        else:
+            mm = _MLIR_SHAPE.search(stripped)
+            if mm:
+                nbytes = _shape_bytes_mlir(mm.group(1), mm.group(2))
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+        count[kind] = count.get(kind, 0) + 1
+    return {
+        "per_kind_bytes": per_kind,
+        "per_kind_count": count,
+        "total_bytes": sum(per_kind.values()),
+        "total_count": sum(count.values()),
+    }
+
+
+def cost_summary(cost) -> Dict:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals", "optimal_seconds"):
+        if k in cost:
+            out[k.replace(" ", "_")] = float(cost[k])
+    # per-memory-space bytes if present
+    for k, v in cost.items():
+        if isinstance(k, str) and k.startswith("bytes accessed"):
+            out[k.replace(" ", "_")] = float(v)
+    return out

@@ -1,0 +1,53 @@
+"""Sanity tests for the paper-scale projection model used by fig09-13:
+the calibration must close exactly, and the predictions must stay inside
+sane bounds around the paper's published values."""
+import sys
+import os
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import pytest
+
+from benchmarks import paper_scale as ps
+
+
+def test_calibration_point_closes():
+    # the model must reproduce its own calibration input exactly
+    assert ps.speedup(128) == pytest.approx(1.64, abs=1e-3)
+
+
+def test_ppo_speedups_inside_paper_band():
+    assert 1.05 < ps.speedup(32) < 1.35
+    assert ps.speedup(32) < ps.speedup(64) < ps.speedup(128)  # grows with scale
+
+
+def test_grpo_volume_amplifies():
+    assert ps.speedup(128, ps.BPT_CAL * 2.5) > ps.speedup(128)
+    assert 2.2 < ps.speedup(128, ps.BPT_CAL * 2.5) < 3.0  # paper: up to 2.62
+
+
+def test_retention_calibration():
+    assert ps.retention(512) == pytest.approx(0.805, abs=1e-6)
+    assert ps.retention(64) == pytest.approx(1.0, abs=1e-6)
+    assert 0.70 < ps.retention(1024) < ps.retention(512)
+
+
+def test_table1_power_law_fit():
+    C, gamma = ps.fit_table1()
+    assert 1.1 < gamma < 1.5
+    for gpus, paper in ps.TABLE1_7B.items():
+        got = ps.baseline_max_batch(gpus)
+        assert paper / 2 <= got <= paper * 2, (gpus, got, paper)
+    # monotone decreasing
+    vals = [ps.baseline_max_batch(g) for g in (32, 64, 128, 256, 512)]
+    assert vals == sorted(vals, reverse=True)
+
+
+def test_long_context_speedup_grows():
+    prev = 0.0
+    for ctx in (8192, 16384, 32768, 65536):
+        true_tokens = int(6144 * (ctx / 8192) ** 0.7)
+        s = ps.speedup(64, seq_tokens=true_tokens, pad_tokens=ctx)
+        assert s > prev
+        prev = s
+    assert 1.3 < ps.speedup(64, seq_tokens=6144, pad_tokens=8192) < 1.7

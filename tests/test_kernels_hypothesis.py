@@ -1,0 +1,87 @@
+"""Hypothesis-driven shape/dtype sweeps for the Pallas kernels (interpret
+mode vs ref oracles): randomized GQA geometry, block sizes, cache fills."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as da_pallas
+from repro.kernels.flash_attention import flash_attention as fa_pallas
+from repro.kernels.ssd import ssd as ssd_pallas
+
+settings.register_profile("kernels", max_examples=12, deadline=None)
+settings.load_profile("kernels")
+
+
+@st.composite
+def attn_geometry(draw):
+    kvh = draw(st.sampled_from([1, 2, 4]))
+    group = draw(st.sampled_from([1, 2, 4]))
+    d = draw(st.sampled_from([16, 32, 64]))
+    n_blocks = draw(st.integers(2, 4))
+    block = draw(st.sampled_from([32, 64]))
+    causal_extra = draw(st.booleans())
+    return kvh, kvh * group, d, n_blocks * block, block, causal_extra
+
+
+@given(attn_geometry(), st.integers(0, 2**31 - 1))
+def test_flash_attention_random_geometry(geo, seed):
+    kvh, h, d, s, block, use_window = geo
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, s, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, s, kvh, d), jnp.float32)
+    window = (s // 2) if use_window else None
+    want = ref.flash_attention(q, k, v, causal=True, window=window)
+    got = fa_pallas(q, k, v, causal=True, window=window,
+                    block_q=block, block_k=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+@given(attn_geometry(), st.integers(0, 2**31 - 1), st.data())
+def test_decode_attention_random_geometry(geo, seed, data):
+    kvh, h, d, s, block, _ = geo
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, s, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, s, kvh, d), jnp.float32)
+    cl = jnp.asarray(
+        [data.draw(st.integers(1, s)) for _ in range(B)], jnp.int32)
+    o_r, l_r = ref.decode_attention(q, k, v, cl, return_lse=True)
+    o_p, l_p = da_pallas(q, k, v, cl, block_s=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_r),
+                               atol=1e-3, rtol=1e-3)
+
+
+@given(
+    st.sampled_from([2, 4]),       # heads
+    st.sampled_from([8, 16, 32]),  # head dim P
+    st.sampled_from([1, 2]),       # groups
+    st.sampled_from([8, 16]),      # state N
+    st.integers(2, 4),             # chunks
+    st.integers(0, 2**31 - 1),
+)
+def test_ssd_random_geometry(nh, p, g, n, nc, seed):
+    if nh % g:
+        return
+    chunk = 32
+    s = nc * chunk
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (2, s, nh, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, s, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    Bm = jax.random.normal(ks[3], (2, s, g, n))
+    Cm = jax.random.normal(ks[4], (2, s, g, n))
+    D = jax.random.normal(ks[5], (nh,))
+    y_r, h_r = ref.ssd_scan(x, dt, A, Bm, Cm, D, return_state=True)
+    y_p, h_p = ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(h_p), np.asarray(h_r),
+                               atol=2e-3, rtol=2e-3)

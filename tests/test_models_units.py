@@ -1,0 +1,134 @@
+"""Model-layer unit tests: MoE dispatch equivalence, RoPE properties,
+causal conv, norms, tokenizer, pattern compression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import lm, moe, ssm
+from repro.models.layers import apply_norm, init_norm, rope
+
+
+def moe_cfg(e=4, k=2):
+    return reduced(ARCHS["mixtral-8x7b"], num_experts=e, num_experts_per_tok=k,
+                   d_model=32, d_ff=16, vocab_size=256)
+
+
+def test_moe_dense_equals_sparse_dispatch():
+    """The GSPMD-friendly dense dispatch and the gather-based top-k dispatch
+    must produce identical outputs."""
+    cfg = moe_cfg()
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32)
+    y1, a1 = moe.apply_moe(cfg, p, x)
+    y2, a2 = moe.apply_moe_topk_sparse(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(float(a1), float(a2), atol=1e-5)
+
+
+def test_moe_aux_loss_balanced_router():
+    """Uniform router -> aux loss ~= num_experts * E * (1/E)*(1/E) * ... = 1."""
+    cfg = moe_cfg(e=4, k=1)
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0))
+    p = dict(p, router=jnp.zeros_like(p["router"]))  # uniform logits
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, cfg.d_model))
+    _, aux = moe.apply_moe(cfg, p, x)
+    # density ~uniform over ties -> aux ~ E * sum(1/E * 1/E) = 1
+    assert 0.8 < float(aux) < 1.3
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    pos = jnp.arange(8)[None, :]
+    y = rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # dot products depend only on relative distance
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def score(pq, pk):
+        qr = rope(q, jnp.array([[pq]]), 1e4)
+        kr = rope(k, jnp.array([[pk]]), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert score(3, 1) == pytest.approx(score(10, 8), abs=1e-4)
+
+
+def test_causal_conv_matches_explicit():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 10, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 4))
+    y, state = ssm._causal_conv(x, w)
+    xp = np.concatenate([np.zeros((2, 2, 4)), np.asarray(x)], axis=1)
+    want = sum(xp[:, i:i + 10] * np.asarray(w)[i] for i in range(3))
+    np.testing.assert_allclose(np.asarray(y), want, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(x[:, -2:]), atol=1e-6)
+
+
+def test_causal_conv_streaming_equals_batch():
+    """Stepwise conv with carried state == full-sequence conv."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 4))
+    y_full, _ = ssm._causal_conv(x, w)
+    state = None
+    outs = []
+    for t in range(6):
+        y_t, state = ssm._causal_conv(x[:, t:t + 1], w, state)
+        outs.append(y_t)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full), atol=1e-5)
+
+
+def test_norms():
+    cfg_rms = reduced(ARCHS["deepseek-67b"], d_model=16)
+    cfg_ln = dataclasses.replace(cfg_rms, norm_type="layernorm")
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 16)) * 5 + 2
+    y_rms = apply_norm(cfg_rms, init_norm(cfg_rms), x)
+    y_ln = apply_norm(cfg_ln, init_norm(cfg_ln), x)
+    # layernorm removes the mean, rmsnorm does not
+    assert abs(float(jnp.mean(y_ln))) < 1e-4
+    assert abs(float(jnp.mean(y_rms))) > 1e-2
+    np.testing.assert_allclose(
+        np.mean(np.square(np.asarray(y_rms, np.float32)), -1), 1.0, rtol=0.05)
+
+
+def test_pattern_compression():
+    assert lm.pattern_length(ARCHS["deepseek-67b"]) == 1
+    assert lm.pattern_length(ARCHS["mixtral-8x7b"]) == 1
+    assert lm.pattern_length(ARCHS["jamba-v0.1-52b"]) == 8
+    assert lm.pattern_length(ARCHS["mamba2-2.7b"]) == 1
+    kinds = ARCHS["jamba-v0.1-52b"].layer_kinds()
+    assert kinds[4][0] == "attn" and kinds[0][0] == "ssm"
+    assert sum(1 for k in kinds if k[0] == "attn") == 4  # 1:7 interleave
+    assert sum(1 for k in kinds if k[1] == "moe") == 16
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    for text in ("12+34=", "hello world", "ünïcødé"):
+        ids = tok.encode(text, eos=True)
+        assert tok.decode(ids) == text
+    assert tok.decode(tok.encode("abc")) == "abc"
+    assert tok.vocab_size == 259
+
+
+def test_vocab_padding_exact():
+    for arch, cfg in ARCHS.items():
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab - cfg.vocab_size < 256
+
+
+def test_ring_cache_width():
+    cfg = ARCHS["mixtral-8x7b"]
+    caches = jax.eval_shape(
+        lambda: lm.init_caches(cfg, batch=1, smax=524_288))
+    k = caches[0]["k"]
+    assert k.shape[2] == 4096  # bounded at the SWA window, not 524288
+    cfg2 = ARCHS["deepseek-67b"]
+    caches2 = jax.eval_shape(lambda: lm.init_caches(cfg2, batch=1, smax=8192))
+    assert caches2[0]["k"].shape[2] == 8192  # full attention keeps smax

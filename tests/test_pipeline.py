@@ -1,0 +1,86 @@
+"""End-to-end pipeline integration tests (single device)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core import build_pipeline, grpo_dag, ppo_dag
+from repro.ft import checkpoint
+from repro.rl import RLConfig
+
+
+def small_cfg(**kw):
+    base = dict(vocab_size=260, num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, head_dim=16, d_ff=128)
+    base.update(kw)
+    return reduced(ARCHS["qwen2.5-7b"], **base)
+
+
+def test_grpo_iteration_metrics_sane():
+    pipe = build_pipeline(small_cfg(),
+                          RLConfig(algorithm="grpo", group_size=4,
+                                   max_new_tokens=6, lr=1e-4),
+                          prompts_per_iter=4)
+    m = pipe.run(2)[-1]
+    assert abs(m["actor/ratio_mean"] - 1.0) < 0.05  # engines agree
+    assert m["actor/entropy"] > 0
+    assert m["rollout/tokens"] > 0
+    assert pipe.buffer.stats.bytes_through_controller == 0
+
+
+def test_ppo_iteration_with_critic():
+    pipe = build_pipeline(small_cfg(),
+                          RLConfig(algorithm="ppo", max_new_tokens=6,
+                                   lr=1e-4, critic_lr=1e-4),
+                          prompts_per_iter=8)
+    m = pipe.run(2)[-1]
+    assert "critic/loss" in m
+    assert np.isfinite(m["critic/loss"])
+    assert "actor/loss" in m
+
+
+def test_centralized_and_distributed_same_math():
+    """Fig. 14 invariant at unit scale: buffer arm changes no numbers."""
+    rl = RLConfig(algorithm="grpo", group_size=4, max_new_tokens=4, lr=3e-4)
+    cfg = small_cfg()
+    h_d = build_pipeline(cfg, rl, prompts_per_iter=4, seed=11).run(3)
+    h_c = build_pipeline(cfg, rl, prompts_per_iter=4, seed=11,
+                         centralized=True).run(3)
+    for a, b in zip(h_d, h_c):
+        for k in ("reward/mean", "actor/entropy", "actor/loss"):
+            # replicated vs sharded inputs re-jit with different fusion ->
+            # float reduction order differs at ~1e-4; trajectories coincide
+            assert a[k] == pytest.approx(b[k], rel=1e-3, abs=1e-3), k
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    pipe = build_pipeline(small_cfg(),
+                          RLConfig(algorithm="grpo", group_size=2,
+                                   max_new_tokens=4, lr=1e-4),
+                          prompts_per_iter=2)
+    pipe.run(1)
+    checkpoint.save(str(tmp_path), pipe.ctx.actor_state, step=1)
+    restored, step = checkpoint.restore(str(tmp_path), pipe.ctx.actor_state)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(pipe.ctx.actor_state),
+                    jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_learning_improves_reward():
+    """A short real GRPO run on single-digit sums must lift the reward above
+    the random-policy floor (the convergence benchmark does the long run)."""
+    from repro.data.dataset import SyntheticMathDataset
+
+    cfg = small_cfg(num_layers=2, d_model=128, d_ff=256)
+    rl = RLConfig(algorithm="grpo", group_size=8, max_new_tokens=3,
+                  lr=1e-3, kl_coef=0.0)
+    ds = SyntheticMathDataset(4096, seed=1234, max_operand=4)
+    pipe = build_pipeline(cfg, rl, prompts_per_iter=8, seed=1234, dataset=ds)
+    hist = pipe.run(40)
+    early = np.mean([h["reward/mean"] for h in hist[:8]])
+    late = np.mean([h["reward/mean"] for h in hist[-8:]])
+    assert late > early + 0.05, (early, late)  # genuine improvement
+    assert hist[-1]["actor/entropy"] < hist[0]["actor/entropy"]

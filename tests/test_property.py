@@ -1,0 +1,162 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dag import DAG, Node, NodeType, Role
+from repro.core.planner import DAGPlanner, validate_serialization
+from repro.data.dataloader import DistributedDataloader
+from repro.data.dataset import SyntheticTextDataset
+from repro.ft.straggler import rebalance
+from repro.kernels import ref
+from repro.rl import advantage
+from repro.distributed.compression import _dequantize, _quantize
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# --------------------------------------------------------------------------- #
+# planner: any random DAG serializes to a valid total order covering all nodes
+# --------------------------------------------------------------------------- #
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(2, 12))
+    nodes = []
+    for i in range(n):
+        deps = tuple(
+            f"n{j}" for j in range(i)
+            if draw(st.booleans()) and draw(st.integers(0, 2)) == 0
+        )
+        nodes.append(
+            Node(f"n{i}", draw(st.sampled_from(list(Role))),
+                 draw(st.sampled_from(list(NodeType))), deps=deps)
+        )
+    return DAG.from_nodes(nodes)
+
+
+@given(random_dag())
+def test_planner_total_order_invariants(dag):
+    plan = DAGPlanner().plan(dag)
+    assert sorted(plan.order) == sorted(dag.nodes)
+    assert validate_serialization(plan)
+    # serialization implies: each task's predecessor is exactly the previous
+    for i, t in enumerate(plan.tasks):
+        assert t.after == (plan.tasks[i - 1].node.node_id if i else None)
+
+
+# --------------------------------------------------------------------------- #
+# dataloader: partitions of any epoch cover the dataset exactly once
+# --------------------------------------------------------------------------- #
+@given(st.integers(1, 4), st.integers(0, 3))
+def test_dataloader_epoch_partition(dp, epoch):
+    ds = SyntheticTextDataset(64, 4, 128, seed=9)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    dl = DistributedDataloader(ds, mesh=mesh, global_batch=16, seed=5)
+    perm = dl._epoch_perm(epoch)
+    assert sorted(perm.tolist()) == list(range(64))
+    # the dp partition of a batch covers the batch exactly once
+    idx = dl.batch_indices(epoch * 4)
+    parts = np.array_split(idx, dp)
+    assert sorted(np.concatenate(parts).tolist()) == sorted(idx.tolist())
+
+
+# --------------------------------------------------------------------------- #
+# GRPO: advantages are group-mean-free and scale-invariant
+# --------------------------------------------------------------------------- #
+@given(
+    st.integers(1, 4),
+    st.integers(2, 8),
+    st.floats(0.5, 10.0),
+)
+def test_grpo_invariants(groups, gsize, scale):
+    rng = np.random.default_rng(groups * 100 + gsize)
+    rewards = jnp.asarray(rng.normal(size=groups * gsize).astype(np.float32))
+    mask = jnp.ones((groups * gsize, 3))
+    adv = advantage.grpo(rewards, mask, group_size=gsize)
+    per_group = np.asarray(adv[:, 0]).reshape(groups, gsize)
+    np.testing.assert_allclose(per_group.mean(axis=1), 0.0, atol=1e-4)
+    # affine shift of rewards leaves advantages unchanged
+    adv2 = advantage.grpo(rewards + 7.0, mask, group_size=gsize)
+    np.testing.assert_allclose(np.asarray(adv2), np.asarray(adv), atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# GAE reduces to discounted returns at lam=1, values=0
+# --------------------------------------------------------------------------- #
+@given(st.integers(1, 3), st.integers(2, 10), st.floats(0.8, 1.0))
+def test_gae_lambda1_is_discounted_return(b, t, gamma):
+    rng = np.random.default_rng(b * 31 + t)
+    rewards = jnp.asarray(rng.normal(size=(b, t)).astype(np.float32))
+    values = jnp.zeros((b, t))
+    mask = jnp.ones((b, t))
+    adv, ret = advantage.gae(rewards, values, mask, gamma=gamma, lam=1.0)
+    want = np.zeros((b, t))
+    acc = np.zeros(b)
+    r = np.asarray(rewards)
+    for i in reversed(range(t)):
+        acc = r[:, i] + gamma * acc
+        want[:, i] = acc
+    np.testing.assert_allclose(np.asarray(adv), want, atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# decode-shard combine == unsharded decode for any split
+# --------------------------------------------------------------------------- #
+@given(st.integers(1, 4), st.sampled_from([2, 4, 8]))
+def test_decode_shard_combine_any_split(seed, parts):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, S, H, D = 2, 64, 2, 8
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    cl = jnp.array([S // 3, S], jnp.int32)
+    want = ref.decode_attention(q, k, v, cl)
+    sz = S // parts
+    os_, ls_ = [], []
+    for i in range(parts):
+        o, l = ref.decode_attention(
+            q, k[:, i * sz:(i + 1) * sz], v[:, i * sz:(i + 1) * sz],
+            cl, pos_offset=i * sz, return_lse=True)
+        os_.append(o)
+        ls_.append(l)
+    got = ref.combine_decode_shards(jnp.stack(os_), jnp.stack(ls_))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# straggler rebalance: every shard assigned exactly once, never to dead hosts
+# --------------------------------------------------------------------------- #
+@given(
+    st.lists(st.floats(0.5, 20.0), min_size=2, max_size=12),
+    st.data(),
+)
+def test_rebalance_covers_all_shards(times, data):
+    n = len(times)
+    dead = data.draw(st.lists(st.integers(0, n - 1), max_size=n - 1, unique=True))
+    if len(dead) >= n:
+        return
+    try:
+        out = rebalance(times, dead=dead)
+    except RuntimeError:
+        return  # all hosts dead
+    assigned = sorted(s for shards in out.values() for s in shards)
+    assert assigned == list(range(n))
+    for d in dead:
+        assert out[d] == []
+
+
+# --------------------------------------------------------------------------- #
+# int8 quantization round-trip error bounded by scale/2
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 5), st.integers(1, 300))
+def test_quantize_roundtrip_bound(seed, size):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=size).astype(np.float32) * 10)
+    q, scale = _quantize(x)
+    y = _dequantize(q, scale, x.shape, x.size)
+    bound = np.repeat(np.asarray(scale)[:, 0], 256)[: x.size] * 0.5 + 1e-6
+    assert np.all(np.abs(np.asarray(y) - np.asarray(x)) <= bound.reshape(x.shape))

@@ -1,0 +1,188 @@
+"""RL math tests: advantages, losses, rollout semantics — vs hand calcs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import get_model
+from repro.rl import advantage, loss
+from repro.rl import reward as reward_mod
+from repro.rl.rollout import generate
+
+
+# --------------------------------------------------------------------------- #
+# advantages
+# --------------------------------------------------------------------------- #
+def test_gae_matches_hand_rollout():
+    rewards = jnp.array([[0.0, 0.0, 1.0]])
+    values = jnp.array([[0.5, 0.6, 0.7]])
+    mask = jnp.ones((1, 3))
+    gamma, lam = 0.9, 0.8
+    adv, ret = advantage.gae(rewards, values, mask, gamma=gamma, lam=lam)
+    # hand computation (v_4 = 0)
+    d2 = 1.0 + 0.0 - 0.7
+    d1 = 0.0 + gamma * 0.7 - 0.6
+    d0 = 0.0 + gamma * 0.6 - 0.5
+    a2 = d2
+    a1 = d1 + gamma * lam * a2
+    a0 = d0 + gamma * lam * a1
+    np.testing.assert_allclose(np.asarray(adv[0]), [a0, a1, a2], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ret), np.asarray(adv + values), atol=1e-6)
+
+
+def test_gae_respects_mask():
+    rewards = jnp.array([[1.0, 5.0, 5.0]])
+    values = jnp.zeros((1, 3))
+    mask = jnp.array([[1.0, 0.0, 0.0]])  # only first token is response
+    adv, _ = advantage.gae(rewards, values, mask)
+    assert float(adv[0, 1]) == 0.0 and float(adv[0, 2]) == 0.0
+    np.testing.assert_allclose(float(adv[0, 0]), 1.0, atol=1e-6)
+
+
+def test_grpo_group_normalization():
+    rewards = jnp.array([1.0, 0.0, 1.0, 1.0])  # two groups of 2
+    mask = jnp.ones((4, 3))
+    adv = advantage.grpo(rewards, mask, group_size=2)
+    g0 = np.asarray(adv[:2, 0])
+    np.testing.assert_allclose(g0, [(1 - 0.5) / 0.5, (0 - 0.5) / 0.5], atol=1e-4)
+    # identical rewards in group -> zero advantage (std eps guarded)
+    np.testing.assert_allclose(np.asarray(adv[2:, 0]), [0.0, 0.0], atol=1e-3)
+
+
+def test_whiten():
+    adv = jnp.array([[1.0, 2.0, 3.0, 4.0]])
+    mask = jnp.ones((1, 4))
+    w = advantage.whiten(adv, mask)
+    assert abs(float(jnp.mean(w))) < 1e-5
+    np.testing.assert_allclose(float(jnp.std(w)), 1.0, atol=1e-3)
+
+
+# --------------------------------------------------------------------------- #
+# losses
+# --------------------------------------------------------------------------- #
+def test_ppo_clip_behaviour():
+    mask = jnp.ones((1, 1))
+    adv = jnp.ones((1, 1))
+    old = jnp.zeros((1, 1))
+    # ratio within clip: gradient flows; far above clip with adv>0: clipped
+    out_in = loss.ppo_policy_loss(jnp.full((1, 1), 0.1), old, adv, mask)
+    out_hi = loss.ppo_policy_loss(jnp.full((1, 1), 1.0), old, adv, mask)
+    assert float(out_hi["loss"]) == pytest.approx(-1.2, abs=1e-5)  # clipped at 1+eps
+    assert float(out_in["loss"]) == pytest.approx(-np.exp(0.1), abs=1e-4)
+    assert float(out_hi["clipfrac"]) == 1.0
+
+
+def test_kl_k3_nonnegative_and_zero_at_equal():
+    lp = jnp.array([[0.5, -0.3]])
+    mask = jnp.ones((1, 2))
+    assert float(loss.kl_penalty(lp, lp, mask)) == pytest.approx(0.0, abs=1e-7)
+    ref = lp + jnp.array([[0.2, -0.4]])
+    assert float(loss.kl_penalty(lp, ref, mask, kind="k3")) > 0
+
+
+def test_value_loss_clipping():
+    old_v = jnp.zeros((1, 1))
+    ret = jnp.full((1, 1), 1.0)
+    mask = jnp.ones((1, 1))
+    # current value jumped far from old: clipped term dominates
+    out = loss.value_loss(jnp.full((1, 1), 0.9), old_v, ret, mask, clip_eps=0.2)
+    # clipped prediction = 0.2 -> err (0.2-1)^2 = .64; raw err = .01 -> max
+    assert float(out["loss"]) == pytest.approx(0.5 * 0.64, abs=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# rollout engine
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260, num_layers=2)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_rollout_shapes_and_mask(tiny_model):
+    cfg, model, params = tiny_model
+    tok = ByteTokenizer()
+    B, Lp, T = 4, 6, 8
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, Lp), 3, 200)
+    res = generate(model, params, prompt, jax.random.PRNGKey(2),
+                   max_new=T, temperature=1.0, eos_id=tok.eos_id)
+    assert res.tokens.shape == (B, Lp + T)
+    assert res.response_mask.shape == (B, Lp + T)
+    assert not np.any(np.asarray(res.response_mask[:, :Lp]))  # prompt unmasked
+    np.testing.assert_array_equal(np.asarray(res.tokens[:, :Lp]), np.asarray(prompt))
+    assert np.all(np.asarray(res.lengths) >= 1)
+    assert np.all(np.asarray(res.lengths) <= T)
+
+
+def test_rollout_greedy_deterministic(tiny_model):
+    cfg, model, params = tiny_model
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 3, 200)
+    r1 = generate(model, params, prompt, jax.random.PRNGKey(2), max_new=6,
+                  temperature=0.0)
+    r2 = generate(model, params, prompt, jax.random.PRNGKey(99), max_new=6,
+                  temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(r1.tokens), np.asarray(r2.tokens))
+
+
+def test_rollout_logprobs_match_teacher_forcing(tiny_model):
+    """Behaviour logprobs from the decode loop == teacher-forced rescoring."""
+    cfg, model, params = tiny_model
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 5), 3, 200)
+    res = generate(model, params, prompt, jax.random.PRNGKey(4), max_new=6,
+                   temperature=1.0)
+    lp, _ = model.logprobs(params, res.tokens)
+    m = np.asarray(res.response_mask)
+    got = np.asarray(res.old_logprob)[m]
+    want = np.asarray(lp)[m]
+    np.testing.assert_allclose(got, want, atol=5e-2)  # bf16 cache tolerance
+
+
+def test_eos_stops_counting(tiny_model):
+    cfg, model, params = tiny_model
+    tok = ByteTokenizer()
+    # force EOS to be argmax-reachable: temperature 0 with a crafted prompt is
+    # flaky for a random model; instead check that masked tokens are pad
+    res = generate(model, params,
+                   jax.random.randint(jax.random.PRNGKey(5), (8, 5), 3, 200),
+                   jax.random.PRNGKey(6), max_new=12, temperature=2.0,
+                   eos_id=3)  # low id -> likely sampled
+    toks = np.asarray(res.tokens[:, 5:])
+    mask = np.asarray(res.response_mask[:, 5:])
+    lens = np.asarray(res.lengths)
+    for b in range(8):
+        # after the response ends, everything is pad
+        assert np.all(toks[b, lens[b]:] == tok.pad_id) or lens[b] == 12
+
+
+# --------------------------------------------------------------------------- #
+# function reward
+# --------------------------------------------------------------------------- #
+def test_math_reward_tokens_exact_and_partial():
+    tok = ByteTokenizer()
+    ds_prompt = tok.encode("12+34=")
+    ans = 46
+    Lp = len(ds_prompt)
+
+    def build(resp_text):
+        resp = list(tok.encode(resp_text)) + [tok.eos_id]
+        toks = np.concatenate([ds_prompt, resp, [0] * (4 - len(resp) + 4)])
+        mask = np.zeros_like(toks, bool)
+        mask[Lp : Lp + len(resp)] = True
+        return jnp.asarray(toks[None]), jnp.asarray(mask[None])
+
+    t, m = build("46")
+    r = reward_mod.math_reward_tokens(t, m, jnp.array([ans]), tok)
+    assert float(r[0]) == 1.0
+    t, m = build("41")  # first digit right
+    r = reward_mod.math_reward_tokens(t, m, jnp.array([ans]), tok)
+    assert float(r[0]) == pytest.approx(0.1)
+    t, m = build("99")
+    r = reward_mod.math_reward_tokens(t, m, jnp.array([ans]), tok)
+    assert float(r[0]) == 0.0
+    t, m = build("468")  # right digits but no EOS after -> not exact
+    r = reward_mod.math_reward_tokens(t, m, jnp.array([ans]), tok)
+    assert float(r[0]) < 1.0

@@ -1,0 +1,149 @@
+"""Sharding-rule unit tests: PartitionSpecs must divide every dim they name,
+cover every arch's param tree, and express the documented layout."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.distributed import sharding as shr
+from repro.launch.workloads import caches_shapes, state_shapes
+
+
+class FakeMesh:
+    """Shape-only stand-in (don't build 256 devices in unit tests)."""
+
+    def __init__(self, shape_map):
+        self.shape = dict(shape_map)
+        self.axis_names = tuple(shape_map)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["pod1", "pod2"])
+def test_param_specs_divisible(arch, mesh):
+    cfg = ARCHS[arch]
+    state = state_shapes(cfg)
+    specs = shr.param_specs(cfg, mesh, state.params)
+    leaves = jax.tree_util.tree_leaves_with_path(state.params)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            size = _axis_size(mesh, entry)
+            assert dim % size == 0, (
+                f"{arch}: {jax.tree_util.keystr(path)} dim {dim} "
+                f"not divisible by {entry} ({size})"
+            )
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "mixtral-8x7b", "mamba2-2.7b",
+                                  "seamless-m4t-medium"])
+def test_cache_specs_divisible(arch):
+    cfg = ARCHS[arch]
+    for B, S in [(128, 32_768), (1, 4096)]:
+        shapes = caches_shapes(cfg, B, S)
+        specs = shr.cache_specs(cfg, MESH1, B, shapes)
+        for (path, leaf), spec in zip(
+            jax.tree_util.tree_leaves_with_path(shapes),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+        ):
+            for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * 8):
+                assert dim % _axis_size(MESH1, entry) == 0, (arch, path, spec)
+
+
+def test_fsdp_scaling_property():
+    """Param bytes per device must scale ~1/devices for a dense arch."""
+    cfg = ARCHS["deepseek-67b"]
+    state = state_shapes(cfg)
+    for mesh in (MESH1, MESH2):
+        specs = shr.param_specs(cfg, mesh, state.params)
+        total = 0
+        for leaf, spec in zip(
+            jax.tree.leaves(state.params),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+        ):
+            shard = leaf.size
+            for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * 8):
+                shard //= _axis_size(mesh, entry)
+            total += shard * leaf.dtype.itemsize
+        n_chips = np.prod(list(mesh.shape.values()))
+        # 67B bf16 params over the mesh: within 2x of N*2/chips (embeddings
+        # and replicated norms add slack)
+        ideal = cfg.num_params() * 2 / n_chips
+        assert total < 2.2 * ideal, (n_chips, total, ideal)
+
+
+def test_batch_axes_picks_divisible_prefix():
+    assert shr.batch_axes(MESH1, 256) == ("data",)
+    assert shr.batch_axes(MESH2, 256) == ("pod", "data")
+    assert shr.batch_axes(MESH1, 1) is None
+    assert shr.batch_axes(MESH2, 2) == ("pod",)
+
+
+def test_gqa_kv_replicated_when_not_divisible():
+    cfg = ARCHS["deepseek-67b"]  # kv=8 < tp=16
+    state = state_shapes(cfg)
+    specs = shr.param_specs(cfg, MESH1, state.params)
+    flat = {jax.tree_util.keystr(p): s for p, s in
+            jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))}
+    wk = [v for k, v in flat.items() if "w_k" in k][0]
+    wq = [v for k, v in flat.items() if "w_q" in k][0]
+    assert "model" not in str(wk[-1])  # kv replicated over model
+    assert wq[-1] == "model"  # q heads TP-sharded
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_serve_param_specs_divisible_and_no_fsdp(arch):
+    """Serve layout: TP over `model` only, replicated over data (no per-step
+    FSDP gathers), every named dim divisible."""
+    cfg = ARCHS[arch]
+    state = state_shapes(cfg)
+    specs = shr.param_specs(cfg, MESH1, state.params, mode="serve")
+    for (path, leaf), spec in zip(
+        jax.tree_util.tree_leaves_with_path(state.params),
+        jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+    ):
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            assert dim % _axis_size(MESH1, entry) == 0, (arch, path, spec)
+            assert entry in (None, "model", ("model",)), (arch, path, spec)
+
+
+def test_serve_mode_selection_by_memory():
+    from repro.configs.base import ShapeConfig
+    from repro.launch.workloads import serve_param_mode
+
+    decode = ShapeConfig("decode_32k", 32_768, 128, "decode")
+    # 67B/16 = 8.4GB weights + ~1GB cache -> resident layout fits
+    assert serve_param_mode(ARCHS["deepseek-67b"], decode, MESH1) == "serve"
+    # 104B/16 = 13GB + cache -> over budget, falls back to FSDP gathers
+    assert serve_param_mode(ARCHS["command-r-plus-104b"], decode, MESH1) == "train"
+
+
+def test_moe_expert_dim_spec():
+    cfg = ARCHS["mixtral-8x7b"]  # 8 experts, not 16-divisible
+    state = state_shapes(cfg)
+    specs = shr.param_specs(cfg, MESH1, state.params)
+    flat = {jax.tree_util.keystr(p): s for p, s in
+            jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))}
+    w_in = [v for k, v in flat.items() if "moe" in k and "w_in" in k][0]
+    # (N, E, d, f): E replicated, f TP
+    assert w_in[-1] == "model"
+    assert w_in[-3] is None
