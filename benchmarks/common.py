@@ -33,11 +33,13 @@ def tiny_cfg(arch: str = "qwen2.5-7b", **kw):
     return reduced(ARCHS[arch], **base)
 
 
-def bench_pipeline(cfg, rl: RLConfig, *, centralized: bool, iters: int = 3,
+def bench_pipeline(cfg, rl: RLConfig, *, centralized: bool = False,
+                   coordinator=None, iters: int = 3,
                    prompts_per_iter: int = 8, warmup: int = 1, seed: int = 0):
-    """Returns (s_per_iter, tokens_per_iter, pipeline)."""
+    """Returns (s_per_iter, tokens_per_iter, pipeline, timed_history)."""
     pipe = build_pipeline(cfg, rl, prompts_per_iter=prompts_per_iter,
-                          centralized=centralized, seed=seed)
+                          centralized=centralized, coordinator=coordinator,
+                          seed=seed)
     for _ in range(warmup):
         pipe.run(1)
     pipe.buffer.stats.reset()
@@ -48,7 +50,7 @@ def bench_pipeline(cfg, rl: RLConfig, *, centralized: bool, iters: int = 3,
     seqs = prompts_per_iter * g
     # paper metric: total tokens in the global batch / iteration time
     tokens = seqs * (6 + rl.max_new_tokens)  # prompt len 6 + responses
-    return dt, tokens, pipe
+    return dt, tokens, pipe, hist
 
 
 # hardware constants for projections (paper testbed + v5e target)

@@ -18,8 +18,8 @@ def main() -> None:
     cfg = tiny_cfg()
     rl = RLConfig(algorithm="ppo", max_new_tokens=16, lr=1e-5)
 
-    dt_d, tok, pipe_d = bench_pipeline(cfg, rl, centralized=False, iters=3)
-    dt_c, _, pipe_c = bench_pipeline(cfg, rl, centralized=True, iters=3)
+    dt_d, tok, pipe_d, _ = bench_pipeline(cfg, rl, centralized=False, iters=3)
+    dt_c, _, pipe_c, _ = bench_pipeline(cfg, rl, centralized=True, iters=3)
     emit("fig09/ppo_distflow_tokens_per_s", dt_d * 1e6, f"{tok / dt_d:.1f} tok/s")
     emit("fig09/ppo_centralized_tokens_per_s", dt_c * 1e6, f"{tok / dt_c:.1f} tok/s")
     emit("fig09/ppo_measured_speedup_1host", 0.0, f"{dt_c / dt_d:.2f}x")

@@ -17,16 +17,16 @@ def main() -> None:
     rl_g = RLConfig(algorithm="grpo", group_size=8, max_new_tokens=16, lr=1e-5)
     rl_p = RLConfig(algorithm="ppo", max_new_tokens=16, lr=1e-5)
 
-    dt_d, tok, pipe_d = bench_pipeline(cfg, rl_g, centralized=False, iters=3,
+    dt_d, tok, pipe_d, _ = bench_pipeline(cfg, rl_g, centralized=False, iters=3,
                                        prompts_per_iter=4)
-    dt_c, _, pipe_c = bench_pipeline(cfg, rl_g, centralized=True, iters=3,
+    dt_c, _, pipe_c, _ = bench_pipeline(cfg, rl_g, centralized=True, iters=3,
                                      prompts_per_iter=4)
     emit("fig10/grpo_distflow_tokens_per_s", dt_d * 1e6, f"{tok / dt_d:.1f} tok/s")
     emit("fig10/grpo_centralized_tokens_per_s", dt_c * 1e6, f"{tok / dt_c:.1f} tok/s")
     emit("fig10/grpo_measured_speedup_1host", 0.0, f"{dt_c / dt_d:.2f}x")
 
     # measured volume ratio GRPO vs PPO at equal prompt counts
-    _, _, pipe_p = bench_pipeline(cfg, rl_p, centralized=True, iters=2,
+    _, _, pipe_p, _ = bench_pipeline(cfg, rl_p, centralized=True, iters=2,
                                   prompts_per_iter=4)
     vol_g = pipe_c.buffer.stats.bytes_through_controller / 3
     vol_p = pipe_p.buffer.stats.bytes_through_controller / 2

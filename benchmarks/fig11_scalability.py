@@ -17,7 +17,7 @@ from repro.rl import RLConfig
 def main() -> None:
     cfg = tiny_cfg()
     rl = RLConfig(algorithm="grpo", group_size=4, max_new_tokens=16, lr=1e-5)
-    dt_d, tok, pipe_d = bench_pipeline(cfg, rl, centralized=False, iters=3,
+    dt_d, tok, pipe_d, _ = bench_pipeline(cfg, rl, centralized=False, iters=3,
                                        prompts_per_iter=4)
     emit("fig11/measured_controller_bytes", 0.0,
          f"{pipe_d.buffer.stats.bytes_through_controller}B (distflow: must be 0)")

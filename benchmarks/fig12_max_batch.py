@@ -21,7 +21,7 @@ from repro.rl import RLConfig
 def main() -> None:
     cfg = tiny_cfg()
     rl = RLConfig(algorithm="grpo", group_size=4, max_new_tokens=16, lr=1e-5)
-    _, _, pipe = bench_pipeline(cfg, rl, centralized=True, iters=2,
+    _, _, pipe, _ = bench_pipeline(cfg, rl, centralized=True, iters=2,
                                 prompts_per_iter=4)
     res = pipe.buffer.controller_resident_bytes
     emit("fig12/measured_controller_resident", 0.0,

@@ -18,9 +18,9 @@ def main() -> None:
     for max_new in (16, 48):
         rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=max_new,
                       lr=1e-5)
-        dt_d, _, _ = bench_pipeline(cfg, rl, centralized=False, iters=2,
+        dt_d, _, _, _ = bench_pipeline(cfg, rl, centralized=False, iters=2,
                                     prompts_per_iter=4)
-        dt_c, _, _ = bench_pipeline(cfg, rl, centralized=True, iters=2,
+        dt_c, _, _, _ = bench_pipeline(cfg, rl, centralized=True, iters=2,
                                     prompts_per_iter=4)
         speeds[max_new] = dt_c / dt_d
         emit(f"fig13/measured_speedup_len{max_new}", dt_d * 1e6,

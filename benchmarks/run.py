@@ -3,12 +3,18 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit)."""
 from __future__ import annotations
 
+import os
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` from the repo root: make the `benchmarks`
+# package importable no matter how this file is invoked
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     from benchmarks import (
+        coordinator,
         fig09_ppo_throughput,
         fig10_grpo_throughput,
         fig11_scalability,
@@ -26,6 +32,7 @@ def main() -> None:
         ("fig12", fig12_max_batch.main),
         ("fig13", fig13_long_context.main),
         ("fig14", fig14_convergence.main),
+        ("coordinator", coordinator.main),
         ("roofline", roofline.main),
     ]
     failed = []

@@ -7,7 +7,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.configs import ARCHS, reduced
+from repro.configs import ARCHS, DataCoordinatorConfig, reduced
 from repro.core import build_pipeline
 from repro.rl import RLConfig
 
@@ -18,7 +18,11 @@ def main():
                   d_model=128, d_ff=256)
     rl = RLConfig(algorithm="grpo", group_size=8, max_new_tokens=4,
                   lr=3e-4, kl_coef=0.0)
-    pipe = build_pipeline(cfg, rl, prompts_per_iter=8, seed=0)
+    # Data Coordinator v2: double-buffered stage handoffs + dataloader
+    # prefetch (values are bitwise-identical to the synchronous path)
+    coord = DataCoordinatorConfig(double_buffer=True, prefetch=1)
+    pipe = build_pipeline(cfg, rl, prompts_per_iter=8, seed=0,
+                          coordinator=coord)
 
     print("execution plan (paper Fig. 4 serialization):", pipe.plan.order)
     for it in range(20):

@@ -1,4 +1,5 @@
 from repro.configs.base import (
+    DataCoordinatorConfig,
     ModelConfig,
     ShapeConfig,
     ALL_SHAPES,

@@ -199,6 +199,34 @@ class ModelConfig:
 
 
 # --------------------------------------------------------------------------- #
+# Data Coordinator (paper §6: Distributed Dataloader + Databuffer).
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class DataCoordinatorConfig:
+    """Flags for Data Coordinator v2 (paper §6.2: "local caching, load
+    balancing, and asynchronous double buffer"). All off by default — the
+    defaults reproduce the synchronous v1 coordinator bit-for-bit."""
+
+    # two rotating databuffer slots + spec prefetch: stage-boundary reshards
+    # for iteration i+1 are dispatched while iteration i still computes
+    double_buffer: bool = False
+    # repack variable-length rollout batches into near-equal-token DP buckets
+    # before MODEL_INFERENCE / MODEL_TRAIN stages (LPT binning,
+    # ft.straggler.balance_by_length)
+    load_balance: bool = False
+    # dataloader look-ahead: materialize the next `prefetch` per-device
+    # partitions one step ahead of the consumer (0 = synchronous)
+    prefetch: int = 0
+    # number of token buckets for the load balancer; 0 = the mesh's DP degree
+    # (product of non-"model" axes). Values > DP degree create virtual
+    # buckets, useful on small meshes / in tests.
+    num_buckets: int = 0
+    # alert threshold: balance metrics report when max/mean bucket tokens
+    # exceeds this after repacking
+    balance_tolerance: float = 1.25
+
+
+# --------------------------------------------------------------------------- #
 # Input shapes (assigned): every LM arch carries the same four shape cells.
 # --------------------------------------------------------------------------- #
 @dataclass(frozen=True)

@@ -1,7 +1,11 @@
 # DistFlow core: the paper's primary contribution in JAX.
 from repro.core.dag import DAG, Node, NodeType, Role
 from repro.core.planner import DAGPlanner, ExecutionPlan, validate_serialization
-from repro.core.databuffer import CentralizedDatabuffer, DistributedDatabuffer
+from repro.core.databuffer import (
+    CentralizedDatabuffer,
+    DistributedDatabuffer,
+    DoubleBufferedDatabuffer,
+)
 from repro.core.registry import Registry, default_registry
 from repro.core.worker import DAGWorker, WorkerContext
 from repro.core.pipeline import Pipeline, build_pipeline, grpo_dag, ppo_dag

@@ -22,15 +22,13 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
-import jax
-
 from repro.core.dag import NodeType
 from repro.core.worker import DAGWorker
 
 
 class PipelinedDAGWorker(DAGWorker):
-    def __init__(self, ctx, plan, registry, buffer):
-        super().__init__(ctx, plan, registry, buffer)
+    def __init__(self, ctx, plan, registry, buffer, coordinator=None):
+        super().__init__(ctx, plan, registry, buffer, coordinator)
         self._rollout_state = None  # actor snapshot for the behaviour policy
         self._pending: Optional[Dict] = None  # buffered trajectories
         # split the chain at the first MODEL_TRAIN node
@@ -42,17 +40,13 @@ class PipelinedDAGWorker(DAGWorker):
         ]
 
     def run_iteration(self) -> Dict[str, float]:
-        import time
-
         metrics: Dict[str, float] = {}
         # --- generation + eval under the STALE snapshot -------------------
         live_state = self.ctx.actor_state
         if self._rollout_state is not None:
             self.ctx.actor_state = self._rollout_state
         for node, fn in self.gen_queue:
-            t0 = time.perf_counter()
-            metrics.update(fn(self.ctx, self.buffer, node) or {})
-            metrics[f"time/{node.node_id}"] = time.perf_counter() - t0
+            self.execute_node(node, fn, metrics)
         self.ctx.actor_state = live_state
         fresh = {k: self.buffer.pop(k) for k in list(self.buffer.keys())}
 
@@ -61,9 +55,7 @@ class PipelinedDAGWorker(DAGWorker):
             for k, v in self._pending.items():
                 self.buffer.put(k, v)
             for node, fn in self.train_queue:
-                t0 = time.perf_counter()
-                metrics.update(fn(self.ctx, self.buffer, node) or {})
-                metrics[f"time/{node.node_id}"] = time.perf_counter() - t0
+                self.execute_node(node, fn, metrics)
             self.buffer.clear()
         self._pending = fresh
         # snapshot the (just-updated) actor as the next behaviour policy:

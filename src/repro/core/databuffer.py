@@ -18,6 +18,7 @@ benchmarks can compare against the centralized baseline's all-to-one volume.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
@@ -34,10 +35,15 @@ class BufferStats:
     redistributions: int = 0
     bytes_moved: int = 0  # bytes crossing device boundaries in redistributions
     bytes_through_controller: int = 0  # always 0 for the distributed buffer
+    # double-buffer accounting (DoubleBufferedDatabuffer only):
+    overlap_hits: int = 0  # gets served by a reshard issued ahead of time
+    sync_waits: int = 0  # gets that had to issue the reshard on the spot
+    rotations: int = 0  # iteration boundaries (slot swaps)
 
     def reset(self):
         self.puts = self.fast_path_hits = self.redistributions = 0
         self.bytes_moved = self.bytes_through_controller = 0
+        self.overlap_hits = self.sync_waits = self.rotations = 0
 
 
 class DistributedDatabuffer:
@@ -114,6 +120,132 @@ def _resharding_bytes(value: jax.Array, target: NamedSharding) -> int:
     # fraction resident: for a pure DP-degree change over the same axis order,
     # each destination shard overlaps its source shard by min(dp_a, dp_b)/max.
     return int(total)
+
+
+class DoubleBufferedDatabuffer(DistributedDatabuffer):
+    """Asynchronous double buffer (paper §6.2: "local caching, load balancing,
+    and asynchronous double buffer").
+
+    Two rotating slots decouple producer and consumer iterations: ``clear()``
+    at an iteration boundary *rotates* instead of dropping — the retired
+    slot's arrays stay referenced, so transfers still in flight for iteration
+    i's consumers are never invalidated while iteration i+1's producers
+    already fill the other slot.
+
+    On top of the slots sits spec prefetch: the buffer records, per key, the
+    PartitionSpecs consumers have historically requested (iteration 0 is the
+    recording pass). From then on every ``put`` immediately issues the
+    ``jax.device_put`` toward each recorded consumer sharding. JAX dispatch
+    is asynchronous, so the GSPMD all-to-all for stage boundary k+1 runs
+    while the host is still driving stage k — ``get`` then finds the staged
+    array and returns it without issuing (or waiting on dispatch of) any
+    transfer. ``overlap_hits`` counts those; ``sync_waits`` counts gets that
+    still had to reshard on the spot (first iteration, or a never-seen spec).
+
+    Values are bitwise-identical to the synchronous path: the staged array is
+    the product of exactly the same ``device_put`` the base class would issue
+    inside ``get``, just dispatched earlier.
+    """
+
+    def __init__(self, mesh: Mesh):
+        super().__init__(mesh)
+        self._slots = [{}, {}]
+        self._staged_slots = [{}, {}]  # (key, norm_spec) -> prefetched array
+        self._active = 0
+        self._store = self._slots[0]
+        self._staged = self._staged_slots[0]
+        # key -> {normalized spec -> PartitionSpec} learned from consumers
+        self._consumer_specs: Dict[str, Dict[tuple, P]] = {}
+        self._staging_paused = False
+
+    # ------------------------------------------------------------------ #
+    def put(self, key: str, value: jax.Array, spec: Optional[P] = None) -> None:
+        # drop any staged reshard of a previous value under this key
+        for sk in [sk for sk in self._staged if sk[0] == key]:
+            del self._staged[sk]
+        super().put(key, value, spec)
+        self._stage(key)
+
+    def prefetch(self, key: str, spec: P) -> None:
+        """Explicitly pre-declare a consumer sharding (optional API: the
+        learned path makes this unnecessary after the first iteration)."""
+        stored = self._store.get(key)
+        if stored is None:
+            return
+        norm = _normalize(spec, stored.ndim)
+        self._consumer_specs.setdefault(key, {})[norm] = spec
+        self._stage(key)
+
+    @contextlib.contextmanager
+    def staging_paused(self):
+        """Suspend put-time staging, then stage the final contents once on
+        exit. Used by the worker around stages that rewrite their own outputs
+        (the load-balance repack re-puts every rollout key), so each key's
+        reshard is dispatched once, for the value consumers will read."""
+        self._staging_paused = True
+        try:
+            yield
+        finally:
+            self._staging_paused = False
+            for key in list(self._store):
+                self._stage(key)
+
+    def _stage(self, key: str) -> None:
+        """Issue async reshards of ``key`` toward every recorded consumer
+        sharding that differs from how the value is stored."""
+        if self._staging_paused:
+            return
+        value = self._store[key]
+        for norm, spec in self._consumer_specs.get(key, {}).items():
+            if self._matches(value, spec) or (key, norm) in self._staged:
+                continue
+            target = NamedSharding(self.mesh, spec)
+            self.stats.redistributions += 1
+            self.stats.bytes_moved += _resharding_bytes(value, target)
+            # async dispatch: returns immediately, transfer overlaps compute
+            self._staged[(key, norm)] = jax.device_put(value, target)
+
+    def get(self, key: str, spec: Optional[P] = None) -> jax.Array:
+        value = self._store[key]
+        if spec is None:
+            return value
+        norm = _normalize(spec, value.ndim)
+        self._consumer_specs.setdefault(key, {})[norm] = spec
+        if self._matches(value, spec):
+            self.stats.fast_path_hits += 1
+            return value
+        staged = self._staged.get((key, norm))
+        if staged is not None:
+            self.stats.overlap_hits += 1  # transfer already in flight / done
+            return staged
+        self.stats.sync_waits += 1
+        target = NamedSharding(self.mesh, spec)
+        self.stats.redistributions += 1
+        self.stats.bytes_moved += _resharding_bytes(value, target)
+        out = jax.device_put(value, target)
+        self._staged[(key, norm)] = out  # serve repeat gets from the cache
+        return out
+
+    def pop(self, key: str) -> jax.Array:
+        for sk in [sk for sk in self._staged if sk[0] == key]:
+            del self._staged[sk]
+        return self._store.pop(key)
+
+    def rotate(self) -> None:
+        """Iteration boundary: swap slots; the new active slot starts empty
+        while the retired slot keeps its references alive for in-flight
+        consumers of the previous iteration."""
+        self._active ^= 1
+        self._store = self._slots[self._active]
+        self._staged = self._staged_slots[self._active]
+        self._store.clear()
+        self._staged.clear()
+        self.stats.rotations += 1
+
+    def clear(self) -> None:
+        # the worker calls clear() at end of iteration; for the double buffer
+        # that is a rotation, not a drop (paper's asynchronous double buffer)
+        self.rotate()
 
 
 class CentralizedDatabuffer(DistributedDatabuffer):

@@ -17,9 +17,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import DataCoordinatorConfig, ModelConfig
 from repro.core.dag import DAG, Node, NodeType, Role
-from repro.core.databuffer import CentralizedDatabuffer, DistributedDatabuffer
+from repro.core.databuffer import (
+    CentralizedDatabuffer,
+    DistributedDatabuffer,
+    DoubleBufferedDatabuffer,
+)
 from repro.core.planner import DAGPlanner
 from repro.core.registry import Registry, default_registry
 from repro.core.worker import DAGWorker, WorkerContext
@@ -146,14 +150,15 @@ def build_pipeline(
     dataset=None,
     prompts_per_iter: int = 8,
     centralized: bool = False,
+    coordinator: Optional[DataCoordinatorConfig] = None,
     registry: Optional[Registry] = None,
     seed: int = 0,
 ) -> Pipeline:
+    coordinator = coordinator or DataCoordinatorConfig()
     if mesh is None:
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro.launch.mesh import make_compat_mesh
+
+        mesh = make_compat_mesh((1, 1), ("data", "model"))
     tok = ByteTokenizer()
     assert cfg.vocab_size >= tok.vocab_size, "model vocab must cover the tokenizer"
     model = get_model(cfg)
@@ -172,6 +177,7 @@ def build_pipeline(
             mesh=mesh,
             global_batch=prompts_per_iter,
             seed=seed,
+            prefetch=coordinator.prefetch,
         ),
         actor_state=trainer.init_state(actor_params),
         ref_params=ref_params,
@@ -183,7 +189,13 @@ def build_pipeline(
 
     dag = dag or (grpo_dag() if rl.algorithm == "grpo" else ppo_dag())
     plan = DAGPlanner().plan(dag)
-    buffer_cls = CentralizedDatabuffer if centralized else DistributedDatabuffer
+    if centralized:
+        buffer_cls = CentralizedDatabuffer
+    elif coordinator.double_buffer:
+        buffer_cls = DoubleBufferedDatabuffer
+    else:
+        buffer_cls = DistributedDatabuffer
     buffer = buffer_cls(mesh)
-    worker = DAGWorker(ctx, plan, registry or default_registry(), buffer)
+    worker = DAGWorker(ctx, plan, registry or default_registry(), buffer,
+                       coordinator)
     return Pipeline(worker=worker, ctx=ctx, buffer=buffer, dag=dag, plan=plan)

@@ -8,18 +8,22 @@ there is no coordinator process anywhere.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import DataCoordinatorConfig
 from repro.core.databuffer import DistributedDatabuffer
-from repro.core.dag import Node
+from repro.core.dag import Node, NodeType
 from repro.core.planner import ExecutionPlan
 from repro.core.registry import Registry
+from repro.ft import straggler
 
 
 @dataclass
@@ -50,11 +54,13 @@ class DAGWorker:
         plan: ExecutionPlan,
         registry: Registry,
         buffer: DistributedDatabuffer,
+        coordinator: Optional[DataCoordinatorConfig] = None,
     ):
         self.ctx = ctx
         self.plan = plan
         self.registry = registry
         self.buffer = buffer
+        self.coordinator = coordinator or DataCoordinatorConfig()
         # Initialization phase: materialize the execution queue by binding a
         # concrete function to every node (paper Fig. 5).
         self.queue: List[tuple] = [
@@ -66,9 +72,81 @@ class DAGWorker:
         the intermediary state manager between nodes."""
         metrics: Dict[str, float] = {}
         for node, fn in self.queue:
-            t0 = time.perf_counter()
+            self.execute_node(node, fn, metrics)
+        self.buffer.clear()  # intermediate data is transient (paper §6)
+        return metrics
+
+    def execute_node(self, node: Node, fn, metrics: Dict[str, float]) -> None:
+        """Run one stage, record its wall time, and apply the Data
+        Coordinator's post-rollout hooks (length-aware load balancing runs
+        right after GENERATE, once response lengths are known). While the
+        balance repack may rewrite the rollout keys, a double buffer's
+        put-time staging is paused so each reshard is dispatched only once,
+        for the batch order consumers will actually read."""
+        t0 = time.perf_counter()
+        balance_here = (
+            node.type == NodeType.GENERATE and self.coordinator.load_balance
+        )
+        pause = getattr(self.buffer, "staging_paused", None)
+        with contextlib.ExitStack() as stack:
+            if balance_here and pause is not None:
+                stack.enter_context(pause())
             out = fn(self.ctx, self.buffer, node)
             metrics.update(out or {})
             metrics[f"time/{node.node_id}"] = time.perf_counter() - t0
-        self.buffer.clear()  # intermediate data is transient (paper §6)
-        return metrics
+            if balance_here:
+                metrics.update(self._balance_rollouts())
+
+    # ------------------------------------------------------------------ #
+    def _num_buckets(self) -> int:
+        if self.coordinator.num_buckets > 0:
+            return self.coordinator.num_buckets
+        dp = 1
+        for name, size in self.ctx.mesh.shape.items():
+            if name != "model":
+                dp *= size
+        return dp
+
+    def _balance_rollouts(self) -> Dict[str, float]:
+        """Length-aware load balancing (paper §6.2): permute the just-rolled-
+        out batch so contiguous DP shards carry near-equal token counts
+        before the MODEL_INFERENCE / MODEL_TRAIN stages consume it. GRPO
+        prompt groups move as units, so group-relative advantages are
+        unaffected. Every worker computes the identical permutation from the
+        replicated response mask — no coordinator."""
+        nb = self._num_buckets()
+        if nb <= 1 or "response_mask" not in self.buffer.keys():
+            return {}
+        mask = self.buffer.get("response_mask")
+        lengths = np.asarray(jnp.sum(mask, axis=1))
+        g = self.ctx.rl.group_size if self.ctx.rl.algorithm == "grpo" else 1
+        B = len(lengths)
+        # groups must divide evenly into buckets: the DP sharding splits rows
+        # evenly, so uneven group capacities would balance token totals over
+        # shard boundaries that don't exist on the hardware
+        if B % g or (B // g) % nb:
+            return {}
+        before = straggler.bucket_token_ratio(lengths, nb)
+        perm = straggler.balance_by_length(lengths, nb, group_size=g)
+        after = straggler.bucket_token_ratio(lengths, nb, perm)
+        if after < before:  # only repack when it helps
+            dperm = jnp.asarray(perm)
+            for key in self.buffer.keys():
+                value = self.buffer.get(key)
+                if value.ndim >= 1 and value.shape[0] == B:
+                    # re-put under the producer's sharding: a bare jnp.take
+                    # replicates its output on multi-device meshes, which
+                    # would park the full global batch on every device
+                    spec = getattr(value.sharding, "spec", None)
+                    self.buffer.put(key, jnp.take(value, dperm, axis=0), spec)
+        achieved = min(after, before)
+        return {
+            "balance/token_ratio_before": before,
+            "balance/token_ratio_after": achieved,
+            "balance/repacked": float(after < before),
+            # 1.0 when even the repacked batch exceeds the tolerance — i.e. a
+            # single sequence/group dominates and only max-len bounding helps
+            "balance/over_tolerance": float(
+                achieved > self.coordinator.balance_tolerance
+            ),
+        }

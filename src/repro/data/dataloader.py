@@ -15,7 +15,8 @@ Rows-loaded accounting proves the Fig. 6 property in tests: with DP=2 over
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterator, Optional, Tuple
+from collections import deque
+from typing import Callable, Deque, Dict, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,7 @@ class DistributedDataloader:
         global_batch: int,
         dp_spec: P = P(("data",)),
         seed: int = 0,
+        prefetch: int = 0,
     ):
         self.dataset = dataset
         self.mesh = mesh
@@ -41,6 +43,13 @@ class DistributedDataloader:
         self.step = 0
         self.rows_loaded = 0  # local accounting (tests / Fig. 6 property)
         self._excluded: set = set()  # straggler mitigation (ft.straggler)
+        # look-ahead depth (paper §6.2 double buffering on the load side):
+        # with prefetch=k, batch for step s+k is materialized — its rows read
+        # and its device_put dispatched — while the consumer computes step s.
+        self.prefetch = prefetch
+        self._built_step = 0  # next step a build will materialize
+        self._ready: Deque[Dict[str, jax.Array]] = deque()
+        self.prefetch_hits = 0  # batches served from the look-ahead queue
 
     # ------------------------------------------------------------------ #
     def _epoch_perm(self, epoch: int) -> np.ndarray:
@@ -58,10 +67,31 @@ class DistributedDataloader:
 
     # ------------------------------------------------------------------ #
     def next_batch(self) -> Dict[str, jax.Array]:
-        """Build the global batch as sharded jax.Arrays, loading only the
-        locally-needed partitions."""
-        idx = self.batch_indices()
+        """Return the batch for the current step, then advance. With
+        ``prefetch > 0`` the returned batch was (except on the very first
+        call) already materialized during an earlier call; the batches for
+        the next ``prefetch`` steps are dispatched before returning, so host
+        row-loading and device transfers overlap the consumer's compute.
+        Batch CONTENT is a pure function of the step index, so prefetch depth
+        never changes what is returned — only when it is built."""
+        if self.prefetch <= 0:
+            batch = self._build_batch(self.step)
+            self.step += 1
+            return batch
+        served_from_queue = bool(self._ready)
+        while self._built_step <= self.step + self.prefetch:
+            self._ready.append(self._build_batch(self._built_step))
+            self._built_step += 1
+        batch = self._ready.popleft()
+        if served_from_queue:
+            self.prefetch_hits += 1
         self.step += 1
+        return batch
+
+    def _build_batch(self, step: int) -> Dict[str, jax.Array]:
+        """Build the global batch for ``step`` as sharded jax.Arrays, loading
+        only the locally-needed partitions."""
+        idx = self.batch_indices(step)
         rows = self.dataset.get_rows(idx)
         if isinstance(rows, tuple):
             prompts, answers = rows

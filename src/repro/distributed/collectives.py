@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels import ops
+from repro.utils.jax_compat import shard_map
 
 
 def seq_sharded_decode_attention(
@@ -45,7 +46,7 @@ def seq_sharded_decode_attention(
 
     spec_q = P(None, None, None)
     spec_kv = P(None, axis, None, None)
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(spec_q, spec_kv, spec_kv, P(None)),

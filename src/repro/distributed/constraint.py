@@ -42,10 +42,10 @@ def constrain(x: jax.Array, *entries) -> jax.Array:
     No-op without an ambient mesh, and inside shard_map manual regions
     (with_sharding_constraint only accepts Auto axes — the manual caller has
     already fixed the layout)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh.empty or "model" not in mesh.axis_names:
-        return x
-    if any(t != jax.sharding.AxisType.Auto for t in mesh.axis_types):
+    from repro.utils.jax_compat import ambient_mesh
+
+    mesh = ambient_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         return x
     dp = tuple(a for a in mesh.axis_names if a != "model")
     sizes = dict(mesh.shape)

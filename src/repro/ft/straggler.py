@@ -52,6 +52,91 @@ def rebalance(
     return out
 
 
+def balance_by_length(
+    lengths: Sequence[float],
+    num_buckets: int,
+    *,
+    group_size: int = 1,
+    capacities: Optional[Sequence[int]] = None,
+) -> np.ndarray:
+    """Length-aware load balancing (paper §6.2): permutation repacking a
+    variable-length batch into ``num_buckets`` equal-row, near-equal-TOKEN
+    buckets, so that contiguous DP shards of the reordered batch carry
+    balanced work and one long rollout no longer stalls every peer.
+
+    Greedy longest-processing-time binning at *group* granularity: groups of
+    ``group_size`` consecutive rows (GRPO prompt groups; 1 for PPO) are kept
+    intact — their member rows move together — sorted by token weight
+    descending, each assigned to the non-full bucket with the smallest token
+    total. Deterministic (ties break on group index), so every DAG Worker
+    derives the identical permutation with no coordinator, exactly like
+    :func:`rebalance`.
+
+    ``capacities`` (rows-per-bucket in units of groups) defaults to an even
+    split; pass the shard counts from a :func:`rebalance` partition map to
+    skew capacity toward fast hosts (the two mitigations compose: rebalance
+    decides WHO loads how much, balance_by_length decides WHICH sequences).
+
+    Returns a permutation ``perm`` of ``len(lengths)`` row indices: bucket b
+    owns rows ``perm[start_b : start_b + rows_b]``. Invert with
+    :func:`inverse_permutation`.
+    """
+    w = np.asarray(lengths, dtype=np.float64)
+    n = len(w)
+    if n % group_size:
+        raise ValueError(f"batch {n} not divisible by group_size {group_size}")
+    n_groups = n // group_size
+    gw = w.reshape(n_groups, group_size).sum(axis=1)
+
+    if capacities is None:
+        base, extra = divmod(n_groups, num_buckets)
+        capacities = [base + (1 if b < extra else 0) for b in range(num_buckets)]
+    capacities = list(capacities)
+    if sum(capacities) != n_groups:
+        raise ValueError(f"capacities {capacities} must sum to {n_groups} groups")
+
+    order = sorted(range(n_groups), key=lambda g: (-gw[g], g))
+    totals = np.zeros(num_buckets)
+    fill = [0] * num_buckets
+    buckets: List[List[int]] = [[] for _ in range(num_buckets)]
+    for g in order:
+        open_b = [b for b in range(num_buckets) if fill[b] < capacities[b]]
+        b = min(open_b, key=lambda b: (totals[b], b))
+        buckets[b].append(g)
+        totals[b] += gw[g]
+        fill[b] += 1
+
+    perm = np.empty(n, dtype=np.int64)
+    pos = 0
+    for b in range(num_buckets):
+        for g in sorted(buckets[b]):  # stable within-bucket order
+            rows = np.arange(g * group_size, (g + 1) * group_size)
+            perm[pos : pos + group_size] = rows
+            pos += group_size
+    return perm
+
+
+def inverse_permutation(perm: np.ndarray) -> np.ndarray:
+    """inv such that ``x[perm][inv] == x`` (restore original row order)."""
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    return inv
+
+
+def bucket_token_ratio(
+    lengths: Sequence[float], num_buckets: int, perm: Optional[np.ndarray] = None
+) -> float:
+    """max-bucket-tokens / mean-bucket-tokens for contiguous even-row buckets
+    of (optionally permuted) ``lengths`` — the straggler factor a DP sharding
+    of that batch would see (1.0 = perfectly balanced)."""
+    w = np.asarray(lengths, dtype=np.float64)
+    if perm is not None:
+        w = w[perm]
+    sums = np.array([c.sum() for c in np.array_split(w, num_buckets)])
+    mean = sums.mean()
+    return float(sums.max() / mean) if mean > 0 else 1.0
+
+
 class HeartbeatMonitor:
     """Tracks last-seen iteration per host; hosts silent for ``patience``
     iterations are declared dead (drives ``rebalance(dead=...)``)."""

@@ -40,6 +40,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.workloads import build_workload
 from repro.models.lm import pattern_length
 from repro.utils.hlo import collective_bytes, cost_summary
+from repro.utils.jax_compat import use_mesh
 
 
 def _compile(cfg, shape, mesh, *, unroll, serve_mode=None):
@@ -57,7 +58,7 @@ def run_compile_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled, t_lower, t_compile = _compile(cfg, shape, mesh, unroll=False)
         mem = compiled.memory_analysis()
     return {
@@ -114,7 +115,7 @@ def run_roofline_cell(arch: str, shape_name: str) -> dict:
     if shape.kind == "decode":
         from repro.launch.workloads import serve_param_mode
         smode = serve_param_mode(cfg, shape, mesh)
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         c1, _, t1 = _compile(cfg1, shape, mesh, unroll=True, serve_mode=smode)
         m1 = _metrics(c1)
         del c1
@@ -178,7 +179,7 @@ def run_quad_cell(arch: str, shape_name: str) -> dict:
     cfg2, _ = _reduced_depth(cfg, 2)
     seqs = [shape.seq_len // 4, shape.seq_len // 2, shape.seq_len]
     layer_bytes = []
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         for S in seqs:
             sh = dataclasses.replace(shape, seq_len=S)
             c1, _, _ = _compile(cfg1, sh, mesh, unroll=True)

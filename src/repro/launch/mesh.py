@@ -5,20 +5,22 @@ Single pod: (16, 16) = 256 chips, axes (data, model).
 Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — `pod` is the
 extra data-parallel dimension whose gradient reduction crosses the
 inter-pod links.
+
+``make_compat_mesh`` is the version-tolerant constructor every caller should
+use: newer jax releases want explicit ``axis_types=(AxisType.Auto, ...)``,
+older ones (<= 0.4.x) have neither the kwarg nor ``jax.sharding.AxisType``.
 """
 from __future__ import annotations
 
 import jax
 
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.utils.jax_compat import auto_axis_types, make_compat_mesh, use_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_compat_mesh(shape, axes)
 
 
 def make_local_mesh(shape=None, axes=("data", "model")):
@@ -26,4 +28,4 @@ def make_local_mesh(shape=None, axes=("data", "model")):
     n = len(jax.devices())
     if shape is None:
         shape = (n, 1) if len(axes) == 2 else (n,)
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_compat_mesh(shape, axes)

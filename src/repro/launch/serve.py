@@ -21,6 +21,7 @@ from repro.data.tokenizer import ByteTokenizer
 from repro.launch.mesh import make_local_mesh
 from repro.models import get_model
 from repro.rl.rollout import generate
+from repro.utils.jax_compat import use_mesh
 
 
 def main(argv=None) -> None:
@@ -40,7 +41,7 @@ def main(argv=None) -> None:
     tok = ByteTokenizer()
     model = get_model(cfg)
     mesh = make_local_mesh()
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(args.seed))
         texts = [f"{i:02d}+{i + 1:02d}=" for i in range(args.batch)]
         prompt = jnp.asarray(np.stack([tok.encode(t) for t in texts]))

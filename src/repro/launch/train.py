@@ -28,6 +28,7 @@ from repro.ft import checkpoint
 from repro.launch.mesh import make_local_mesh
 from repro.rl import RLConfig
 from repro.rl.trainer import TrainState
+from repro.utils.jax_compat import use_mesh
 
 
 def main(argv=None) -> None:
@@ -67,7 +68,7 @@ def main(argv=None) -> None:
 
         dag = DAG.from_json(args.dag_json)
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         pipe = build_pipeline(
             cfg, rl, mesh=mesh, dag=dag,
             prompts_per_iter=args.prompts_per_iter,

@@ -24,11 +24,11 @@ from repro.core import (
 from repro.core.dag import DAGError
 from repro.data.dataloader import DistributedDataloader
 from repro.data.dataset import SyntheticMathDataset, SyntheticTextDataset
+from repro.utils.jax_compat import make_compat_mesh
 
 
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_compat_mesh((1, 1), ("data", "model"))
 
 
 # --------------------------------------------------------------------------- #

@@ -10,6 +10,7 @@ import pytest
 from repro.configs import ARCHS, reduced
 from repro.models import get_model
 from repro.models.lm import dequant_kv, quant_kv
+from repro.utils.jax_compat import make_compat_mesh
 
 
 # --------------------------------------------------------------------------- #
@@ -97,8 +98,7 @@ def test_weight_switch_preserves_values_and_prices_bytes():
 
     cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=256, num_layers=2,
                   d_model=64, num_heads=4, num_kv_heads=4, head_dim=16)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((1, 1), ("data", "model"))
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     dst = weight_sync.specs_for(cfg, mesh, params, "serve")

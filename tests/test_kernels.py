@@ -144,7 +144,10 @@ def test_ssd_kernel_vs_scan(s, nh, p, g, n, chunk, dtype):
     x, dt, A, Bm, Cm, D = _ssd_inputs(jax.random.PRNGKey(5), 2, s, nh, p, g, n, dtype)
     y_r, h_r = ref.ssd_scan(x, dt, A, Bm, Cm, D, return_state=True)
     y_p, h_p = ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
-    t = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-4, rtol=2e-4)
+    # fp32 tol: chunked recurrence vs sequential scan accumulate in different
+    # orders; the worst observed element error varies with the jax/XLA version
+    # (~3e-4 on CPU jax 0.4.x), so leave headroom above it
+    t = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=1e-3, rtol=1e-3)
     np.testing.assert_allclose(np.array(y_p, np.float32), np.array(y_r, np.float32), **t)
     np.testing.assert_allclose(np.array(h_p), np.array(h_r), atol=1e-3, rtol=1e-3)
 

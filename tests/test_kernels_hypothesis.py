@@ -3,6 +3,11 @@ mode vs ref oracles): randomized GQA geometry, block sizes, cache fills."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install '.[test]' to run these"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref

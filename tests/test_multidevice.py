@@ -18,6 +18,7 @@ def run_py(body: str) -> str:
         "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'\n"
         "import sys\n"
         f"sys.path.insert(0, {os.path.join(REPO, 'src')!r})\n"
+        "from repro.utils.jax_compat import make_compat_mesh, use_mesh, shard_map, peak_memory_bytes\n"
         + textwrap.dedent(body)
     )
     proc = subprocess.run(
@@ -36,8 +37,7 @@ def test_databuffer_all_to_all_dp_resize():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.core import DistributedDatabuffer
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((2, 4), ('data', 'model'))
         buf = DistributedDatabuffer(mesh)
         x = jnp.arange(16 * 4.0).reshape(16, 4)
         buf.put('x', x, P('data', None))          # DP=2 (model-replicated)
@@ -54,20 +54,53 @@ def test_databuffer_all_to_all_dp_resize():
     assert "OK" in out
 
 
+def test_load_balance_repack_preserves_sharding():
+    """The post-GENERATE length-aware repack must keep arrays under the
+    producer's data sharding — a bare jnp.take would replicate the full
+    global batch onto every device (invisible on the 1x1 CI mesh)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import DataCoordinatorConfig
+        from repro.core import DistributedDatabuffer
+        from repro.core.worker import DAGWorker
+        mesh = make_compat_mesh((2, 4), ('data', 'model'))
+        buf = DistributedDatabuffer(mesh)
+        B = 8
+        lengths = np.array([13, 9, 1, 1, 5, 3, 1, 1])
+        mask = (np.arange(16)[None, :] < lengths[:, None]).astype(np.int32)
+        buf.put('response_mask', jnp.asarray(mask), P('data', None))
+        buf.put('tokens', jnp.arange(B * 16).reshape(B, 16), P('data', None))
+        w = DAGWorker.__new__(DAGWorker)
+        w.buffer = buf
+        w.coordinator = DataCoordinatorConfig(load_balance=True, num_buckets=4)
+        class C: pass
+        class RL: algorithm = 'ppo'; group_size = 1
+        w.ctx = C(); w.ctx.mesh = mesh; w.ctx.rl = RL()
+        m = w._balance_rollouts()
+        assert m['balance/repacked'] == 1.0, m
+        assert m['balance/token_ratio_after'] < m['balance/token_ratio_before'], m
+        for k in ('tokens', 'response_mask'):
+            spec = buf.get(k).sharding.spec
+            assert tuple(spec) and tuple(spec)[0] == 'data', (k, spec)
+        print('OK')
+    """)
+    assert "OK" in out
+
+
 def test_compressed_psum_close_to_exact():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import compressed_psum, ef_update
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_compat_mesh((8,), ('data',))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 32))
 
         def body(xs):
             exact = jax.lax.psum(xs[0], 'data')
             approx = compressed_psum(xs[0], 'data')
             return exact, approx
-        exact, approx = jax.jit(jax.shard_map(
+        exact, approx = jax.jit(shard_map(
             body, mesh=mesh, in_specs=(P('data', None, None),),
             out_specs=(P(), P()), check_vma=False))((x,))
         rel = np.abs(np.asarray(exact) - np.asarray(approx)).max() / np.abs(np.asarray(exact)).max()
@@ -93,8 +126,7 @@ def test_checkpoint_elastic_restore(tmp_path):
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.ft import checkpoint
-        mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((4, 2), ('data', 'model'))
         tree = {{
             'w': jax.device_put(jnp.arange(64.0).reshape(8, 8),
                                 NamedSharding(mesh, P('data', 'model'))),
@@ -103,8 +135,7 @@ def test_checkpoint_elastic_restore(tmp_path):
         }}
         checkpoint.save({str(tmp_path)!r}, tree, step=17)
         # elastic restore onto a different topology
-        mesh2 = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                              axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh2 = make_compat_mesh((2, 2, 2), ('pod', 'data', 'model'))
         specs = {{'w': P(('pod','data'), 'model'), 'b': P(None), 'step_scale': P()}}
         restored, step = checkpoint.restore({str(tmp_path)!r}, tree, mesh=mesh2, specs=specs)
         assert step == 17
@@ -125,8 +156,7 @@ def test_seq_sharded_decode_attention_matches_ref():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.distributed.collectives import seq_sharded_decode_attention
         from repro.kernels import ref
-        mesh = jax.make_mesh((1, 8), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((1, 8), ('data', 'model'))
         B, S, H, KVH, D = 2, 64, 4, 2, 16
         ks = jax.random.split(jax.random.PRNGKey(0), 3)
         q = jax.random.normal(ks[0], (B, H, D))
@@ -149,12 +179,11 @@ def test_grpo_pipeline_runs_on_multi_device_mesh():
         from repro.configs import ARCHS, reduced
         from repro.core import build_pipeline
         from repro.rl import RLConfig
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((2, 4), ('data', 'model'))
         cfg = reduced(ARCHS['qwen2.5-7b'], vocab_size=260, num_layers=2,
                       d_model=64, num_heads=4, num_kv_heads=4, head_dim=16)
         rl = RLConfig(algorithm='grpo', group_size=4, max_new_tokens=8, lr=1e-4)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             pipe = build_pipeline(cfg, rl, mesh=mesh, prompts_per_iter=4)
             hist = pipe.run(2)
         assert all(abs(h['actor/ratio_mean'] - 1.0) < 0.1 for h in hist)

@@ -79,7 +79,10 @@ def test_learning_improves_reward():
                   lr=1e-3, kl_coef=0.0)
     ds = SyntheticMathDataset(4096, seed=1234, max_operand=4)
     pipe = build_pipeline(cfg, rl, prompts_per_iter=8, seed=1234, dataset=ds)
-    hist = pipe.run(40)
+    # 90 iterations: the entropy collapse that precedes the reward lift takes
+    # ~60 iterations at this scale (older jax releases land on a slightly
+    # different but equally valid trajectory than the one 40 was tuned for)
+    hist = pipe.run(90)
     early = np.mean([h["reward/mean"] for h in hist[:8]])
     late = np.mean([h["reward/mean"] for h in hist[-8:]])
     assert late > early + 0.05, (early, late)  # genuine improvement

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install '.[test]' to run these"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dag import DAG, Node, NodeType, Role
@@ -9,6 +14,7 @@ from repro.core.planner import DAGPlanner, validate_serialization
 from repro.data.dataloader import DistributedDataloader
 from repro.data.dataset import SyntheticTextDataset
 from repro.ft.straggler import rebalance
+from repro.utils.jax_compat import make_compat_mesh
 from repro.kernels import ref
 from repro.rl import advantage
 from repro.distributed.compression import _dequantize, _quantize
@@ -52,8 +58,7 @@ def test_planner_total_order_invariants(dag):
 @given(st.integers(1, 4), st.integers(0, 3))
 def test_dataloader_epoch_partition(dp, epoch):
     ds = SyntheticTextDataset(64, 4, 128, seed=9)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((1, 1), ("data", "model"))
     dl = DistributedDataloader(ds, mesh=mesh, global_batch=16, seed=5)
     perm = dl._epoch_perm(epoch)
     assert sorted(perm.tolist()) == list(range(64))

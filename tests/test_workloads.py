@@ -17,6 +17,7 @@ def run_py(body: str) -> str:
         "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'\n"
         "import sys\n"
         f"sys.path.insert(0, {os.path.join(REPO, 'src')!r})\n"
+        "from repro.utils.jax_compat import make_compat_mesh, use_mesh, shard_map, peak_memory_bytes\n"
         + textwrap.dedent(body)
     )
     proc = subprocess.run(
@@ -35,17 +36,16 @@ def test_workload_cells_compile_small_mesh(arch):
         from repro.configs import ARCHS, reduced
         from repro.configs.base import ShapeConfig
         from repro.launch.workloads import build_workload
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((2, 4), ('data', 'model'))
         cfg = reduced(ARCHS[{arch!r}], d_model=64, num_heads=4, num_kv_heads=4,
                       head_dim=16, vocab_size=256)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             for kind, (S, B) in {{'train': (64, 8), 'prefill': (64, 8),
                                   'decode': (64, 8)}}.items():
                 wl = build_workload(cfg, ShapeConfig('t', S, B, kind), mesh)
                 compiled = wl.fn.lower(*wl.args).compile()
                 mem = compiled.memory_analysis()
-                assert mem.peak_memory_in_bytes > 0
+                assert peak_memory_bytes(mem) > 0
         print('OK')
     """)
     assert "OK" in out
@@ -56,8 +56,7 @@ def test_collective_parser_sees_spmd_collectives():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.utils.hlo import collective_bytes
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_compat_mesh((8,), ('data',))
 
         def f(x):  # force an all-reduce: contraction over a sharded dim
             return jnp.sum(x, axis=0)
@@ -81,15 +80,14 @@ def test_roofline_extrapolation_consistency():
         from repro.configs.base import ShapeConfig
         from repro.launch.workloads import build_workload
         from repro.utils.hlo import collective_bytes, cost_summary
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((2, 4), ('data', 'model'))
         base = reduced(ARCHS['deepseek-67b'], d_model=64, num_heads=4,
                        num_kv_heads=4, head_dim=16, vocab_size=256)
         shape = ShapeConfig('t', 64, 8, 'train')
 
         def metrics(L):
             cfg = dataclasses.replace(base, num_layers=L)
-            with jax.sharding.set_mesh(mesh):
+            with use_mesh(mesh):
                 wl = build_workload(cfg, shape, mesh, unroll=True)
                 c = wl.fn.lower(*wl.args).compile()
             cost = cost_summary(c.cost_analysis())
