@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs import ARCHS, reduced
 from repro.core import build_pipeline
-from repro.rl import RLConfig
+from repro.rl import RLConfig, get_algorithm
 
 ROWS: List[Dict] = []
 
@@ -46,7 +46,7 @@ def bench_pipeline(cfg, rl: RLConfig, *, centralized: bool = False,
     t0 = time.perf_counter()
     hist = pipe.run(iters)
     dt = (time.perf_counter() - t0) / iters
-    g = rl.group_size if rl.algorithm == "grpo" else 1
+    g = get_algorithm(rl.algorithm).group_size(rl)
     seqs = prompts_per_iter * g
     # paper metric: total tokens in the global batch / iteration time
     tokens = seqs * (6 + rl.max_new_tokens)  # prompt len 6 + responses

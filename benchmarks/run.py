@@ -14,6 +14,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 def main() -> None:
     from benchmarks import (
+        algorithms,
         coordinator,
         fig09_ppo_throughput,
         fig10_grpo_throughput,
@@ -33,6 +34,7 @@ def main() -> None:
         ("fig13", fig13_long_context.main),
         ("fig14", fig14_convergence.main),
         ("coordinator", coordinator.main),
+        ("algorithms", algorithms.main),
         ("roofline", roofline.main),
     ]
     failed = []

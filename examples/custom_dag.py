@@ -20,10 +20,10 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.api import ExperimentSpec
 from repro.configs import ARCHS, reduced
-from repro.core import DAG, Node, NodeType, Role, build_pipeline
+from repro.core import DAG, Node, NodeType, Role
 from repro.core.registry import default_registry
-from repro.core.worker import DAGWorker
 from repro.rl import RLConfig
 
 
@@ -64,8 +64,12 @@ def main():
     reg = default_registry()
     reg.register(Role.REWARD, NodeType.MODEL_INFERENCE, length_penalty_reward,
                  override=True)
-    pipe = build_pipeline(cfg, rl, dag=grpo_no_ref_dag(), prompts_per_iter=4,
-                          registry=reg)
+    # the whole experiment — model, rl, custom DAG — is one declarative,
+    # JSON-serializable spec; only the registry (live functions) rides along
+    # as a compile() argument
+    exp = ExperimentSpec(model=cfg, rl=rl, prompts_per_iter=4,
+                         dag=grpo_no_ref_dag().to_spec())
+    pipe = exp.compile(registry=reg)
 
     print("custom plan:", pipe.plan.order)
     assert "reference_inference" not in pipe.plan.order

@@ -7,8 +7,8 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro.api import ExperimentSpec
 from repro.configs import ARCHS, DataCoordinatorConfig, reduced
-from repro.core import build_pipeline
 from repro.rl import RLConfig
 
 
@@ -16,13 +16,19 @@ def main():
     # a reduced gemma-family config (CPU-sized)
     cfg = reduced(ARCHS["gemma-2b"], vocab_size=260, num_layers=2,
                   d_model=128, d_ff=256)
-    rl = RLConfig(algorithm="grpo", group_size=8, max_new_tokens=4,
-                  lr=3e-4, kl_coef=0.0)
-    # Data Coordinator v2: double-buffered stage handoffs + dataloader
-    # prefetch (values are bitwise-identical to the synchronous path)
-    coord = DataCoordinatorConfig(double_buffer=True, prefetch=1)
-    pipe = build_pipeline(cfg, rl, prompts_per_iter=8, seed=0,
-                          coordinator=coord)
+    # the whole run is one declarative spec: swap algorithm="grpo" for
+    # "ppo", "rloo", or "reinforce_pp" and everything downstream follows.
+    # Data Coordinator v2 flags (double buffer + prefetch) are bitwise-
+    # identical to the synchronous path.
+    exp = ExperimentSpec(
+        model=cfg,
+        rl=RLConfig(algorithm="grpo", group_size=8, max_new_tokens=4,
+                    lr=3e-4, kl_coef=0.0),
+        coordinator=DataCoordinatorConfig(double_buffer=True, prefetch=1),
+        prompts_per_iter=8,
+        seed=0,
+    )
+    pipe = exp.compile()
 
     print("execution plan (paper Fig. 4 serialization):", pipe.plan.order)
     for it in range(20):

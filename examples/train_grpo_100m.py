@@ -17,8 +17,8 @@ sys.path.insert(0, "src")
 
 import dataclasses
 
+from repro.api import ExperimentSpec
 from repro.configs import ARCHS
-from repro.core import build_pipeline
 from repro.ft import checkpoint
 from repro.rl import RLConfig
 
@@ -52,7 +52,8 @@ def main():
     print(f"model {cfg.name}: {n_params / 1e6:.1f}M params")
     rl = RLConfig(algorithm="grpo", group_size=8, max_new_tokens=4,
                   lr=1e-4, kl_coef=0.001)
-    pipe = build_pipeline(cfg, rl, prompts_per_iter=8, seed=0)
+    exp = ExperimentSpec(model=cfg, rl=rl, prompts_per_iter=8, seed=0)
+    pipe = exp.compile()
 
     t0 = time.perf_counter()
     for it in range(args.iters):

@@ -2,4 +2,15 @@
 
 Paper: "DistFlow: A Fully Distributed RL Framework for Scalable and
 Efficient LLM Post-Training" (Wang et al., 2025). See DESIGN.md.
+
+The top-level entry point is :class:`repro.api.ExperimentSpec` (re-exported
+here lazily so ``import repro`` stays cheap).
 """
+
+
+def __getattr__(name):
+    if name == "ExperimentSpec":
+        from repro.api import ExperimentSpec
+
+        return ExperimentSpec
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,133 @@
+"""Top-level declarative API: :class:`ExperimentSpec`.
+
+An ExperimentSpec is the single serializable description of an RL
+post-training run — model architecture, algorithm + hyperparameters, data
+coordinator flags, mesh/parallelism, and (optionally) a custom DAG in its
+JSON-dict form. ``compile()`` turns it into a runnable
+:class:`~repro.core.pipeline.Pipeline`; ``to_dict``/``from_dict`` (and the
+JSON string forms) round-trip losslessly, so a whole experiment can live in a
+config file, travel over the wire, or be diffed between runs.
+
+    from repro.api import ExperimentSpec
+    from repro.configs import ARCHS, reduced
+    from repro.rl import RLConfig
+
+    exp = ExperimentSpec(
+        model=reduced(ARCHS["qwen2.5-7b"], vocab_size=260),
+        rl=RLConfig(algorithm="rloo", group_size=4),
+        prompts_per_iter=8,
+    )
+    pipe = exp.compile()
+    pipe.run(10)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+from repro.configs.base import DataCoordinatorConfig, ModelConfig
+from repro.rl.trainer import RLConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """Declarative description of one RL experiment.
+
+    ``dag`` is the DAG's dict form (``DAG.to_spec()`` / the JSON config
+    schema), not a live DAG object, so the spec stays JSON-serializable;
+    ``None`` means "use the algorithm's built-in template".
+    ``mesh_shape=None`` compiles onto a local 1x1 mesh (or whatever mesh is
+    passed to ``compile``).
+    """
+
+    model: ModelConfig
+    rl: RLConfig = dataclasses.field(default_factory=RLConfig)
+    coordinator: DataCoordinatorConfig = dataclasses.field(
+        default_factory=DataCoordinatorConfig
+    )
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    mesh_axes: Tuple[str, ...] = ("data", "model")
+    prompts_per_iter: int = 8
+    centralized: bool = False
+    seed: int = 0
+    dag: Optional[Dict] = None
+
+    # ------------------------------------------------------------------ #
+    @property
+    def algorithm(self):
+        """The resolved :class:`~repro.rl.algorithms.AlgorithmSpec`."""
+        from repro.rl import algorithms
+
+        return algorithms.get_algorithm(self.rl.algorithm)
+
+    # ------------------------------------------------------------------ #
+    # serialization
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "model": dataclasses.asdict(self.model),
+            "rl": dataclasses.asdict(self.rl),
+            "coordinator": dataclasses.asdict(self.coordinator),
+            "mesh_shape": list(self.mesh_shape) if self.mesh_shape else None,
+            "mesh_axes": list(self.mesh_axes),
+            "prompts_per_iter": self.prompts_per_iter,
+            "centralized": self.centralized,
+            "seed": self.seed,
+            "dag": self.dag,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        mesh_shape = d.get("mesh_shape")
+        return cls(
+            model=ModelConfig(**d["model"]),
+            rl=RLConfig(**d.get("rl", {})),
+            coordinator=DataCoordinatorConfig(**d.get("coordinator", {})),
+            mesh_shape=tuple(mesh_shape) if mesh_shape else None,
+            mesh_axes=tuple(d.get("mesh_axes", ("data", "model"))),
+            prompts_per_iter=d.get("prompts_per_iter", 8),
+            centralized=d.get("centralized", False),
+            seed=d.get("seed", 0),
+            dag=d.get("dag"),
+        )
+
+    def to_json(self, *, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    # ------------------------------------------------------------------ #
+    # compilation
+    # ------------------------------------------------------------------ #
+    def compile(self, *, mesh=None, dataset=None, registry=None):
+        """Compile the spec into a runnable Pipeline.
+
+        ``mesh`` overrides ``mesh_shape`` (useful when the caller already
+        holds a device mesh); ``dataset``/``registry`` are the non-serializable
+        escape hatches for custom data sources and stage functions.
+        """
+        from repro.core.dag import DAG
+        from repro.core.pipeline import build_pipeline
+
+        if mesh is None and self.mesh_shape is not None:
+            from repro.utils.jax_compat import make_compat_mesh
+
+            mesh = make_compat_mesh(tuple(self.mesh_shape),
+                                    tuple(self.mesh_axes))
+        dag = DAG.from_spec(self.dag) if self.dag is not None else None
+        return build_pipeline(
+            self.model,
+            self.rl,
+            mesh=mesh,
+            dag=dag,
+            dataset=dataset,
+            prompts_per_iter=self.prompts_per_iter,
+            centralized=self.centralized,
+            coordinator=self.coordinator,
+            registry=registry,
+            algorithm=self.algorithm,
+            seed=self.seed,
+        )

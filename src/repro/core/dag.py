@@ -68,10 +68,13 @@ class DAG:
         return cls(nodes=d)
 
     @classmethod
-    def from_json(cls, path: str) -> "DAG":
-        """Load the paper's config-file form: a list of node dicts."""
-        with open(path) as f:
-            spec = json.load(f)
+    def from_spec(cls, spec: Dict) -> "DAG":
+        """Build a DAG from the in-memory config form: a dict with a
+        ``nodes`` list (the same schema ``to_spec``/``to_json`` emit). This
+        is what lets DAG definitions travel inside an ExperimentSpec instead
+        of requiring a file on disk."""
+        if "nodes" not in spec:
+            raise DAGError("DAG spec must contain a 'nodes' list")
         nodes = [
             Node(
                 node_id=n["id"],
@@ -83,6 +86,17 @@ class DAG:
             for n in spec["nodes"]
         ]
         return cls.from_nodes(nodes)
+
+    @classmethod
+    def loads(cls, s: str) -> "DAG":
+        """Parse a DAG from a JSON string (``to_json`` round-trips)."""
+        return cls.from_spec(json.loads(s))
+
+    @classmethod
+    def from_json(cls, path: str) -> "DAG":
+        """Load the paper's config-file form from a file path."""
+        with open(path) as f:
+            return cls.from_spec(json.load(f))
 
     def validate(self) -> None:
         for n in self.nodes.values():
@@ -121,19 +135,20 @@ class DAG:
             out.setdefault(d, []).append(self.nodes[nid])
         return [sorted(out[d], key=lambda n: n.node_id) for d in sorted(out)]
 
+    def to_spec(self) -> Dict:
+        """The in-memory config form (inverse of ``from_spec``)."""
+        return {
+            "nodes": [
+                {
+                    "id": n.node_id,
+                    "role": n.role.value,
+                    "type": n.type.value,
+                    "deps": list(n.deps),
+                    "parallelism": dict(n.parallelism),
+                }
+                for n in self.nodes.values()
+            ]
+        }
+
     def to_json(self) -> str:
-        return json.dumps(
-            {
-                "nodes": [
-                    {
-                        "id": n.node_id,
-                        "role": n.role.value,
-                        "type": n.type.value,
-                        "deps": list(n.deps),
-                        "parallelism": n.parallelism,
-                    }
-                    for n in self.nodes.values()
-                ]
-            },
-            indent=2,
-        )
+        return json.dumps(self.to_spec(), indent=2)

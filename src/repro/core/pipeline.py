@@ -1,10 +1,16 @@
 """Built-in RL pipelines (paper Fig. 1) + the end-to-end driver.
 
-``build_pipeline`` wires together every subsystem: model init, jitted engines,
-the DAG (built-in PPO/GRPO or user-supplied), the planner's serialized chain,
+``build_pipeline`` is a thin compiler over specs: it resolves the
+:class:`~repro.rl.algorithms.AlgorithmSpec` for ``rl.algorithm`` (or takes one
+directly), wires together every subsystem — model init, jitted engines, the
+DAG (the spec's template or user-supplied), the planner's serialized chain,
 the Data Coordinator (Distributed Dataloader + Databuffer), and a DAG Worker.
-``centralized=True`` swaps in the single-controller databuffer — the baseline
-arm for the paper's comparisons.
+No layer below this point ever inspects the algorithm *name*; they only see
+the spec's callables. ``centralized=True`` swaps in the single-controller
+databuffer — the baseline arm for the paper's comparisons.
+
+The user-facing entry point is :class:`repro.api.ExperimentSpec`, whose
+``compile()`` lands here.
 """
 from __future__ import annotations
 
@@ -18,7 +24,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import DataCoordinatorConfig, ModelConfig
-from repro.core.dag import DAG, Node, NodeType, Role
+from repro.core.dag import DAG
 from repro.core.databuffer import (
     CentralizedDatabuffer,
     DistributedDatabuffer,
@@ -31,7 +37,6 @@ from repro.data.dataloader import DistributedDataloader
 from repro.data.dataset import SyntheticMathDataset
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import get_model
-from repro.rl import advantage as adv_mod
 from repro.rl import critic as critic_mod
 from repro.rl import reward as reward_mod
 from repro.rl import rollout as rollout_mod
@@ -40,47 +45,26 @@ from repro.rl.trainer import RLConfig
 
 
 # --------------------------------------------------------------------------- #
-# built-in DAGs (paper Fig. 1)
+# built-in DAGs (paper Fig. 1) — re-exported from the algorithm registry for
+# backward compatibility; the templates now live with their specs.
 # --------------------------------------------------------------------------- #
 def grpo_dag() -> DAG:
-    return DAG.from_nodes(
-        [
-            Node("actor_generation", Role.ACTOR, NodeType.GENERATE),
-            Node("reference_inference", Role.REFERENCE, NodeType.MODEL_INFERENCE,
-                 deps=("actor_generation",)),
-            Node("reward_compute", Role.REWARD, NodeType.COMPUTE,
-                 deps=("actor_generation",)),
-            Node("advantage_compute", Role.ADVANTAGE, NodeType.COMPUTE,
-                 deps=("reward_compute",)),
-            Node("actor_train", Role.ACTOR, NodeType.MODEL_TRAIN,
-                 deps=("reference_inference", "advantage_compute")),
-        ]
-    )
+    from repro.rl import algorithms
+
+    return algorithms.grpo_dag()
 
 
 def ppo_dag() -> DAG:
-    return DAG.from_nodes(
-        [
-            Node("actor_generation", Role.ACTOR, NodeType.GENERATE),
-            Node("reference_inference", Role.REFERENCE, NodeType.MODEL_INFERENCE,
-                 deps=("actor_generation",)),
-            Node("reward_compute", Role.REWARD, NodeType.COMPUTE,
-                 deps=("actor_generation",)),
-            Node("critic_inference", Role.CRITIC, NodeType.MODEL_INFERENCE,
-                 deps=("actor_generation",)),
-            Node("advantage_compute", Role.ADVANTAGE, NodeType.COMPUTE,
-                 deps=("reward_compute", "critic_inference",
-                       "reference_inference")),
-            Node("actor_train", Role.ACTOR, NodeType.MODEL_TRAIN,
-                 deps=("advantage_compute",)),
-            Node("critic_train", Role.CRITIC, NodeType.MODEL_TRAIN,
-                 deps=("advantage_compute",)),
-        ]
-    )
+    from repro.rl import algorithms
+
+    return algorithms.ppo_dag()
 
 
 # --------------------------------------------------------------------------- #
-def _build_engines(model, cfg: ModelConfig, rl: RLConfig, tok: ByteTokenizer):
+def _build_engines(model, cfg: ModelConfig, rl: RLConfig, tok: ByteTokenizer,
+                   spec):
+    """Jitted engines for one algorithm spec. The advantage engine comes from
+    ``spec.make_advantage``; critic engines exist iff the spec uses a critic."""
     eng: Dict[str, Any] = {}
 
     def _generate(params, prompts, key):
@@ -97,32 +81,14 @@ def _build_engines(model, cfg: ModelConfig, rl: RLConfig, tok: ByteTokenizer):
             tokens, mask, answers, tok
         )
     )
-    if rl.algorithm == "grpo":
-        eng["advantage"] = jax.jit(
-            lambda rewards, mask: adv_mod.grpo(rewards, mask, group_size=rl.group_size)
-        )
-    else:
-        def _ppo_adv(rewards, mask, old_lp, ref_lp, values):
-            B, T = mask.shape
-            kl = old_lp - ref_lp  # per-token KL estimate (k1)
-            m = mask.astype(jnp.float32)
-            # terminal reward at the last response token
-            last = jnp.maximum(jnp.sum(m, axis=1) - 1, 0).astype(jnp.int32)
-            first = jnp.argmax(mask, axis=1)
-            pos = jnp.clip(first + last, 0, T - 1)
-            tok_rewards = -rl.kl_coef * kl * m
-            tok_rewards = tok_rewards.at[jnp.arange(B), pos].add(rewards)
-            adv, ret = adv_mod.gae(
-                tok_rewards, values * m, m, gamma=rl.gamma, lam=rl.gae_lambda
-            )
-            return adv_mod.whiten(adv, m), ret
-
-        eng["advantage"] = jax.jit(_ppo_adv)
+    eng["advantage"] = jax.jit(spec.make_advantage(rl))
+    if spec.uses_critic:
         eng["values"] = jax.jit(
             lambda p, t: critic_mod.values_fn(model.cfg, p, t)
         )
         eng["critic_step"] = jax.jit(trainer.make_critic_step(model.cfg, rl))
-    eng["actor_step"] = jax.jit(trainer.make_actor_step(model, rl))
+    eng["actor_step"] = jax.jit(trainer.make_actor_step(model, rl,
+                                                        algorithm=spec))
     return eng
 
 
@@ -152,8 +118,12 @@ def build_pipeline(
     centralized: bool = False,
     coordinator: Optional[DataCoordinatorConfig] = None,
     registry: Optional[Registry] = None,
+    algorithm=None,
     seed: int = 0,
 ) -> Pipeline:
+    from repro.rl import algorithms
+
+    spec = algorithm or algorithms.get_algorithm(rl.algorithm)
     coordinator = coordinator or DataCoordinatorConfig()
     if mesh is None:
         from repro.launch.mesh import make_compat_mesh
@@ -171,7 +141,7 @@ def build_pipeline(
     ctx = WorkerContext(
         mesh=mesh,
         rl=rl,
-        engines=_build_engines(model, cfg, rl, tok),
+        engines=_build_engines(model, cfg, rl, tok, spec),
         dataloader=DistributedDataloader(
             dataset or SyntheticMathDataset(4096, seed=seed),
             mesh=mesh,
@@ -183,11 +153,13 @@ def build_pipeline(
         ref_params=ref_params,
         tokenizer=tok,
         key=k_run,
+        algorithm=spec,
     )
-    if rl.algorithm == "ppo":
+    if spec.uses_critic:
         ctx.critic_state = trainer.init_state(critic_mod.init(cfg, k_critic))
 
-    dag = dag or (grpo_dag() if rl.algorithm == "grpo" else ppo_dag())
+    dag = dag or spec.dag_factory()
+    spec.validate_dag(dag)
     plan = DAGPlanner().plan(dag)
     if centralized:
         buffer_cls = CentralizedDatabuffer

@@ -14,6 +14,7 @@ node's stage sharding.
 """
 from __future__ import annotations
 
+import difflib
 from typing import Callable, Dict, Tuple
 
 from repro.core.dag import Node, NodeType, Role
@@ -21,14 +22,26 @@ from repro.core.dag import Node, NodeType, Role
 StageFn = Callable[..., Dict]
 
 
+def _key_str(key: Tuple[Role, NodeType]) -> str:
+    return f"{key[0].value}/{key[1].value}"
+
+
 class Registry:
     def __init__(self):
         self._fns: Dict[Tuple[Role, NodeType], StageFn] = {}
 
+    def _registered_str(self) -> str:
+        return ", ".join(sorted(_key_str(k) for k in self._fns)) or "<none>"
+
     def register(self, role: Role, type_: NodeType, fn: StageFn, *, override=False):
         key = (role, type_)
         if key in self._fns and not override:
-            raise KeyError(f"{key} already registered (pass override=True)")
+            bound = getattr(self._fns[key], "__name__", repr(self._fns[key]))
+            raise KeyError(
+                f"({_key_str(key)}) already registered (bound to {bound}); "
+                f"pass override=True to replace it. "
+                f"Registered keys: [{self._registered_str()}]"
+            )
         self._fns[key] = fn
         return fn
 
@@ -36,9 +49,15 @@ class Registry:
         try:
             return self._fns[node.fn_key]
         except KeyError:
+            want = _key_str(node.fn_key)
+            near = difflib.get_close_matches(
+                want, [_key_str(k) for k in self._fns], n=1, cutoff=0.4
+            )
+            hint = f" Nearest match: {near[0]}." if near else ""
             raise KeyError(
-                f"no function registered for node {node.node_id!r} "
-                f"with (role={node.role}, type={node.type})"
+                f"no function registered for node {node.node_id!r} with "
+                f"(role={node.role.value}, type={node.type.value}). "
+                f"Registered keys: [{self._registered_str()}].{hint}"
             ) from None
 
     def keys(self):

@@ -17,7 +17,14 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.dag import Node
-from repro.rl import advantage as adv_mod
+
+
+def _algo(ctx):
+    """The AlgorithmSpec driving this run (bound by build_pipeline; resolved
+    from the registry for hand-rolled contexts)."""
+    from repro.rl import algorithms
+
+    return algorithms.resolve(ctx)
 
 
 def _specs(ctx):
@@ -36,7 +43,7 @@ def actor_generate(ctx, buffer, node: Node) -> Dict:
     model_spec, _ = _specs(ctx)
     batch = ctx.dataloader.next_batch()
     prompts, answers = batch["prompts"], batch["answers"]
-    g = ctx.rl.group_size if ctx.rl.algorithm == "grpo" else 1
+    g = _algo(ctx).group_size(ctx.rl)
     if g > 1:
         prompts = jnp.repeat(prompts, g, axis=0)
         answers = jnp.repeat(answers, g, axis=0)
@@ -95,21 +102,22 @@ def reward_compute(ctx, buffer, node: Node) -> Dict:
 
 
 def advantage_compute(ctx, buffer, node: Node) -> Dict:
+    """(ADVANTAGE, COMPUTE): run the spec's advantage engine. The spec
+    declares which extra buffer keys the engine consumes beyond
+    (rewards, mask) — e.g. PPO's GAE reads logprobs + values — and which
+    keys its outputs land under (advantages, and returns for critic
+    algorithms)."""
+    spec = _algo(ctx)
     _, compute_spec = _specs(ctx)
     seq_spec = P(compute_spec[0])
     mask = buffer.get("response_mask", compute_spec)
     rewards = buffer.get("rewards", seq_spec)
-    if ctx.rl.algorithm == "grpo":
-        adv = ctx.engines["advantage"](rewards, mask)
-        buffer.put("advantages", adv, compute_spec)
-        return {}
-    # PPO: shaped token rewards (terminal + KL penalty) -> GAE
-    old_lp = buffer.get("old_logprob", compute_spec)
-    ref_lp = buffer.get("ref_logprob", compute_spec)
-    values = buffer.get("old_values", compute_spec)
-    adv, ret = ctx.engines["advantage"](rewards, mask, old_lp, ref_lp, values)
-    buffer.put("advantages", adv, compute_spec)
-    buffer.put("returns", ret, compute_spec)
+    extra = [buffer.get(k, compute_spec) for k in spec.advantage_inputs]
+    out = ctx.engines["advantage"](rewards, mask, *extra)
+    if len(spec.advantage_outputs) == 1:
+        out = (out,)
+    for key, val in zip(spec.advantage_outputs, out):
+        buffer.put(key, val, compute_spec)
     return {}
 
 
@@ -121,7 +129,7 @@ def actor_train(ctx, buffer, node: Node) -> Dict:
         "old_logprob": buffer.get("old_logprob", model_spec),
         "advantages": buffer.get("advantages", model_spec),
     }
-    if ctx.rl.algorithm == "grpo":
+    if _algo(ctx).needs_reference:
         if "ref_logprob" in buffer.keys():
             batch["ref_logprob"] = buffer.get("ref_logprob", model_spec)
         else:

@@ -40,6 +40,9 @@ class WorkerContext:
     ref_params: Any = None
     tokenizer: Any = None
     key: Any = None
+    # the AlgorithmSpec driving this run (repro.rl.algorithms); None means
+    # "resolve rl.algorithm from the registry on demand"
+    algorithm: Any = None
     counters: Dict[str, float] = field(default_factory=dict)
 
     def next_key(self):
@@ -117,15 +120,19 @@ class DAGWorker:
         nb = self._num_buckets()
         if nb <= 1 or "response_mask" not in self.buffer.keys():
             return {}
+        skipped = {"balance/skipped": 1.0}
+        from repro.rl import algorithms
+
         mask = self.buffer.get("response_mask")
         lengths = np.asarray(jnp.sum(mask, axis=1))
-        g = self.ctx.rl.group_size if self.ctx.rl.algorithm == "grpo" else 1
+        g = algorithms.resolve(self.ctx).group_size(self.ctx.rl)
         B = len(lengths)
         # groups must divide evenly into buckets: the DP sharding splits rows
         # evenly, so uneven group capacities would balance token totals over
-        # shard boundaries that don't exist on the hardware
+        # shard boundaries that don't exist on the hardware. The skip metric
+        # keeps a misconfigured num_buckets from disabling balancing invisibly.
         if B % g or (B // g) % nb:
-            return {}
+            return skipped
         before = straggler.bucket_token_ratio(lengths, nb)
         perm = straggler.balance_by_length(lengths, nb, group_size=g)
         after = straggler.bucket_token_ratio(lengths, nb, perm)

@@ -33,14 +33,18 @@ import sys
 import time
 import traceback
 
-import jax
-
 from repro.configs import ARCHS, ASSIGNED, applicable_shapes, get_config, get_shape
 from repro.launch.mesh import make_production_mesh
 from repro.launch.workloads import build_workload
 from repro.models.lm import pattern_length
 from repro.utils.hlo import collective_bytes, cost_summary
 from repro.utils.jax_compat import use_mesh
+
+
+def _resolve_config(arch: str, cfg=None):
+    """The cell's ModelConfig: an explicit override (from --experiment's
+    ExperimentSpec) or the registry entry for ``arch``."""
+    return cfg if cfg is not None else get_config(arch)
 
 
 def _compile(cfg, shape, mesh, *, unroll, serve_mode=None):
@@ -53,9 +57,10 @@ def _compile(cfg, shape, mesh, *, unroll, serve_mode=None):
     return compiled, round(t1 - t0, 1), round(t2 - t1, 1)
 
 
-def run_compile_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
+def run_compile_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                     cfg=None) -> dict:
     """Full-depth scan compile: sharding pass/fail + memory proof."""
-    cfg = get_config(arch)
+    cfg = _resolve_config(arch, cfg)
     shape = get_shape(shape_name)
     mesh = make_production_mesh(multi_pod=multi_pod)
     with use_mesh(mesh):
@@ -101,9 +106,9 @@ def _metrics(compiled):
     }
 
 
-def run_roofline_cell(arch: str, shape_name: str) -> dict:
+def run_roofline_cell(arch: str, shape_name: str, cfg=None) -> dict:
     """Depth-reduced unrolled compiles -> exact per-layer-linear extrapolation."""
-    cfg = get_config(arch)
+    cfg = _resolve_config(arch, cfg)
     shape = get_shape(shape_name)
     mesh = make_production_mesh(multi_pod=False)
     cfg1, P = _reduced_depth(cfg, 1)
@@ -160,7 +165,7 @@ def run_roofline_cell(arch: str, shape_name: str) -> dict:
     }
 
 
-def run_quad_cell(arch: str, shape_name: str) -> dict:
+def run_quad_cell(arch: str, shape_name: str, cfg=None) -> dict:
     """Quadratic-in-S byte extraction (the flash-attention correction).
 
     The pure-jnp attention lowered on CPU materializes (B,H,S,S) score/prob
@@ -172,7 +177,7 @@ def run_quad_cell(arch: str, shape_name: str) -> dict:
     (memory_flash = memory_raw - that)."""
     import numpy as np
 
-    cfg = get_config(arch)
+    cfg = _resolve_config(arch, cfg)
     shape = get_shape(shape_name)
     mesh = make_production_mesh(multi_pod=False)
     cfg1, P = _reduced_depth(cfg, 1)
@@ -216,7 +221,20 @@ def main(argv=None):
                     default="compile")
     ap.add_argument("--out", type=str, default=None)
     ap.add_argument("--skip", type=int, default=0, help="skip first N cells")
+    ap.add_argument("--experiment", type=str, default=None,
+                    help="ExperimentSpec JSON; its model config replaces "
+                         "--arch for single-cell runs")
     args = ap.parse_args(argv)
+
+    cfg_override = None
+    if args.experiment:
+        assert not args.all, "--experiment overrides one model; drop --all"
+        from repro.api import ExperimentSpec
+
+        with open(args.experiment) as f:
+            exp = ExperimentSpec.from_json(f.read())
+        cfg_override = exp.model
+        args.arch = args.arch or cfg_override.name
 
     cells = []
     if args.all:
@@ -228,7 +246,8 @@ def main(argv=None):
                 else:
                     cells.append((arch, shape.name, False))
     else:
-        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        assert (args.arch or cfg_override) and args.shape, \
+            "--arch/--experiment and --shape (or --all)"
         cells.append((args.arch, args.shape, args.multi_pod))
     cells = cells[args.skip:]
 
@@ -237,19 +256,20 @@ def main(argv=None):
         tag = f"{arch}:{shape}:{'2x16x16' if mp else '16x16'}:{args.mode}"
         try:
             if args.mode == "compile":
-                r = run_compile_cell(arch, shape, multi_pod=mp)
+                r = run_compile_cell(arch, shape, multi_pod=mp,
+                                     cfg=cfg_override)
                 print(
                     f"[dryrun] OK   {tag}  peak/device={_fmt(r['memory']['peak_bytes'])}"
                     f"  (lower {r['lower_s']}s compile {r['compile_s']}s)",
                     flush=True,
                 )
             elif args.mode == "quad":
-                r = run_quad_cell(arch, shape)
+                r = run_quad_cell(arch, shape, cfg=cfg_override)
                 print(
                     f"[dryrun] OK   {tag}  s2_bytes={_fmt(r['s2_bytes_total'])}"
                     f"  coeff={r['quad_coeff_per_group']:.3e}", flush=True)
             else:
-                r = run_roofline_cell(arch, shape)
+                r = run_roofline_cell(arch, shape, cfg=cfg_override)
                 print(
                     f"[dryrun] OK   {tag}  flops/dev={r['flops']:.3e}"
                     f"  bytes/dev={r['bytes']:.3e}  coll/dev={_fmt(r['coll_total'])}"

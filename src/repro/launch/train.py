@@ -1,8 +1,10 @@
 """Production RL training driver.
 
-Builds the DistFlow pipeline for ``--arch`` on the requested mesh, runs
-``--iters`` RL iterations with periodic sharded checkpoints, and resumes
-(elastically — any topology) from ``--resume``.
+Compiles an :class:`repro.api.ExperimentSpec` for ``--arch`` on the requested
+mesh, runs ``--iters`` RL iterations with periodic sharded checkpoints, and
+resumes (elastically — any topology) from ``--resume``. A full experiment can
+also be loaded from a JSON file (``--experiment spec.json``, the
+``ExperimentSpec.to_json`` form) and dumped with ``--dump-experiment``.
 
 On real hardware this runs once per host under ``jax.distributed``; on this
 CPU container it drives the same code path on a local mesh (used by the
@@ -11,30 +13,57 @@ examples and the convergence benchmark).
 Usage:
   python -m repro.launch.train --arch qwen2.5-7b --algorithm grpo \
       --iters 500 --ckpt-dir ckpts/ [--resume ckpts/] [--smoke]
+  python -m repro.launch.train --experiment exp.json --iters 100
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
-import jax
-
+from repro.api import ExperimentSpec
 from repro.configs import get_config, reduced
-from repro.core import build_pipeline
 from repro.distributed import sharding as shr
 from repro.ft import checkpoint
 from repro.launch.mesh import make_local_mesh
-from repro.rl import RLConfig
+from repro.rl import RLConfig, list_algorithms
 from repro.rl.trainer import TrainState
 from repro.utils.jax_compat import use_mesh
+
+
+def build_experiment(args) -> ExperimentSpec:
+    """CLI flags -> ExperimentSpec (or load one wholesale from JSON)."""
+    if args.experiment:
+        with open(args.experiment) as f:
+            return ExperimentSpec.from_json(f.read())
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg, vocab_size=260, num_layers=2)
+    rl = RLConfig(
+        algorithm=args.algorithm,
+        group_size=args.group_size,
+        max_new_tokens=args.max_new_tokens,
+        lr=args.lr,
+    )
+    dag = None
+    if args.dag_json:
+        from repro.core import DAG
+
+        dag = DAG.from_json(args.dag_json).to_spec()
+    return ExperimentSpec(
+        model=cfg,
+        rl=rl,
+        prompts_per_iter=args.prompts_per_iter,
+        centralized=args.centralized_baseline,
+        seed=args.seed,
+        dag=dag,
+    )
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-7b")
-    ap.add_argument("--algorithm", choices=["grpo", "ppo"], default="grpo")
+    ap.add_argument("--algorithm", choices=list_algorithms(), default="grpo")
     ap.add_argument("--iters", type=int, default=100)
     ap.add_argument("--prompts-per-iter", type=int, default=8)
     ap.add_argument("--group-size", type=int, default=8)
@@ -50,30 +79,23 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dag-json", default=None,
                     help="custom DAG config file (paper §4.1)")
+    ap.add_argument("--experiment", default=None,
+                    help="ExperimentSpec JSON file; overrides the arch/rl flags")
+    ap.add_argument("--dump-experiment", default=None,
+                    help="write the resolved ExperimentSpec JSON here and exit")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduced(cfg, vocab_size=260, num_layers=2)
-    rl = RLConfig(
-        algorithm=args.algorithm,
-        group_size=args.group_size,
-        max_new_tokens=args.max_new_tokens,
-        lr=args.lr,
-    )
+    exp = build_experiment(args)
+    if args.dump_experiment:
+        with open(args.dump_experiment, "w") as f:
+            f.write(exp.to_json())
+        print(f"[train] wrote {args.dump_experiment}")
+        return
+    cfg = exp.model
     mesh = make_local_mesh()
-    dag = None
-    if args.dag_json:
-        from repro.core import DAG
-
-        dag = DAG.from_json(args.dag_json)
 
     with use_mesh(mesh):
-        pipe = build_pipeline(
-            cfg, rl, mesh=mesh, dag=dag,
-            prompts_per_iter=args.prompts_per_iter,
-            centralized=args.centralized_baseline, seed=args.seed,
-        )
+        pipe = exp.compile(mesh=mesh)
         start = 0
         if args.resume:
             state = pipe.ctx.actor_state

@@ -1,1 +1,7 @@
 from repro.rl.trainer import RLConfig, TrainState, init_state
+from repro.rl.algorithms import (
+    AlgorithmSpec,
+    get_algorithm,
+    list_algorithms,
+    register_algorithm,
+)

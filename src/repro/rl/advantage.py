@@ -1,4 +1,6 @@
-"""Advantage estimators: GAE (PPO) and group-relative (GRPO) — paper Fig. 1."""
+"""Advantage estimators: GAE (PPO), group-relative (GRPO), leave-one-out
+(RLOO), and global-batch-normalized (REINFORCE++) — paper Fig. 1 plus the
+critic-free family registered in :mod:`repro.rl.algorithms`."""
 from __future__ import annotations
 
 import jax
@@ -55,6 +57,37 @@ def grpo(
     mean = jnp.mean(g, axis=1, keepdims=True)
     std = jnp.std(g, axis=1, keepdims=True)
     adv = ((g - mean) / (std + eps)).reshape(B)
+    return adv[:, None] * mask.astype(jnp.float32)
+
+
+def rloo(
+    rewards: jax.Array,  # (B,) scalar reward per sequence
+    mask: jax.Array,  # (B, T)
+    *,
+    group_size: int,
+):
+    """Leave-one-out baseline (RLOO): each rollout's baseline is the mean
+    reward of the *other* ``group_size - 1`` members of its prompt group —
+    an unbiased, critic-free REINFORCE baseline. Requires group_size >= 2."""
+    B = rewards.shape[0]
+    assert B % group_size == 0, (B, group_size)
+    assert group_size >= 2, "rloo needs >= 2 rollouts per prompt"
+    g = rewards.reshape(B // group_size, group_size)
+    baseline = (jnp.sum(g, axis=1, keepdims=True) - g) / (group_size - 1)
+    adv = (g - baseline).reshape(B)
+    return adv[:, None] * mask.astype(jnp.float32)
+
+
+def reinforce_pp(
+    rewards: jax.Array,  # (B,) scalar reward per sequence
+    mask: jax.Array,  # (B, T)
+    *,
+    eps: float = 1e-6,
+):
+    """REINFORCE++ advantages: sequence-level rewards normalized over the
+    *global batch* (mean/std across all rollouts, not per prompt group),
+    broadcast over response tokens. No critic, no per-group statistics."""
+    adv = (rewards - jnp.mean(rewards)) / (jnp.std(rewards) + eps)
     return adv[:, None] * mask.astype(jnp.float32)
 
 

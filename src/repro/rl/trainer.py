@@ -21,7 +21,9 @@ from repro.rl import loss as losses
 
 @dataclasses.dataclass(frozen=True)
 class RLConfig:
-    algorithm: str = "grpo"  # grpo | ppo
+    # registered algorithm name (repro.rl.algorithms: grpo | ppo | rloo |
+    # reinforce_pp | anything added via register_algorithm)
+    algorithm: str = "grpo"
     lr: float = 1e-6
     critic_lr: float = 1e-5
     clip_eps: float = 0.2
@@ -45,25 +47,22 @@ def init_state(params) -> TrainState:
     return TrainState(params=params, opt=adamw.init(params))
 
 
+def _resolve_algorithm(rl: RLConfig, algorithm=None):
+    if algorithm is not None:
+        return algorithm
+    from repro.rl import algorithms  # deferred: algorithms imports rl.loss
+
+    return algorithms.get_algorithm(rl.algorithm)
+
+
 def actor_loss_fn(
-    model: Model, rl: RLConfig, params, batch: Dict[str, jax.Array]
+    model: Model, rl: RLConfig, params, batch: Dict[str, jax.Array],
+    *, algorithm=None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    spec = _resolve_algorithm(rl, algorithm)
     lp, ent = model.logprobs(params, batch["tokens"], remat=True)
     mask = batch["response_mask"]
-    if rl.algorithm == "grpo":
-        out = losses.grpo_loss(
-            lp,
-            batch["old_logprob"],
-            batch["ref_logprob"],
-            batch["advantages"],
-            mask,
-            clip_eps=rl.clip_eps,
-            kl_coef=rl.kl_coef,
-        )
-    else:
-        out = losses.ppo_policy_loss(
-            lp, batch["old_logprob"], batch["advantages"], mask, clip_eps=rl.clip_eps
-        )
+    out = spec.actor_loss(rl, lp, batch)
     loss = out.pop("loss")
     m = mask.astype(jnp.float32)
     out["entropy"] = jnp.sum(ent * m) / jnp.maximum(jnp.sum(m), 1.0)
@@ -72,10 +71,13 @@ def actor_loss_fn(
     return loss, out
 
 
-def make_actor_step(model: Model, rl: RLConfig) -> Callable:
+def make_actor_step(model: Model, rl: RLConfig, *, algorithm=None) -> Callable:
+    spec = _resolve_algorithm(rl, algorithm)
+
     def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
         (loss, metrics), grads = jax.value_and_grad(
-            lambda p: actor_loss_fn(model, rl, p, batch), has_aux=True
+            lambda p: actor_loss_fn(model, rl, p, batch, algorithm=spec),
+            has_aux=True,
         )(state.params)
         grads, gnorm = adamw.clip_by_global_norm(grads, rl.max_grad_norm)
         params, opt = adamw.update(
@@ -112,11 +114,13 @@ def make_critic_step(cfg: ModelConfig, rl: RLConfig) -> Callable:
 
 
 def make_actor_step_accumulated(model: Model, rl: RLConfig, *,
-                                num_microbatches: int) -> Callable:
+                                num_microbatches: int,
+                                algorithm=None) -> Callable:
     """Gradient-accumulated actor update: the global batch is split into
     microbatches scanned sequentially (grads averaged), bounding activation
     memory at 1/num_microbatches while keeping the identical update — the
     standard large-global-batch trick for the paper's 1024-per-node batches."""
+    spec = _resolve_algorithm(rl, algorithm)
 
     def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
         B = batch["tokens"].shape[0]
@@ -131,7 +135,9 @@ def make_actor_step_accumulated(model: Model, rl: RLConfig, *,
         def body(carry, i):
             grads_acc, loss_acc = carry
             (loss, metrics), grads = jax.value_and_grad(
-                lambda p: actor_loss_fn(model, rl, p, slice_mb(i)), has_aux=True
+                lambda p: actor_loss_fn(model, rl, p, slice_mb(i),
+                                        algorithm=spec),
+                has_aux=True,
             )(state.params)
             grads_acc = jax.tree.map(
                 lambda a, g: a + g.astype(jnp.float32) / num_microbatches,

@@ -171,6 +171,18 @@ def test_balancer_rejects_bad_shapes():
         balance_by_length([1, 2, 3, 4], 2, capacities=[1, 2])
 
 
+def test_balancer_divisibility_skip_is_reported():
+    """A num_buckets that can't evenly split the rollout groups must not
+    disable balancing invisibly: the iteration reports balance/skipped."""
+    coord = DataCoordinatorConfig(load_balance=True, num_buckets=3)
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4, lr=1e-4)
+    pipe = build_pipeline(small_cfg(), rl, prompts_per_iter=4, seed=0,
+                          coordinator=coord)
+    m = pipe.run(1)[-1]  # 8 rollouts -> 4 groups, 4 % 3 != 0
+    assert m.get("balance/skipped") == 1.0
+    assert "balance/token_ratio_before" not in m
+
+
 def test_balanced_pipeline_reports_metrics_and_learns():
     coord = DataCoordinatorConfig(load_balance=True, num_buckets=4)
     rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=8, lr=1e-4)

@@ -56,6 +56,31 @@ def test_dag_json_roundtrip(tmp_path):
     assert dag2.nodes["actor_train"].deps == dag.nodes["actor_train"].deps
 
 
+def test_dag_spec_and_loads_roundtrip():
+    """to_json -> loads and to_spec -> from_spec are verified round-trips,
+    including per-node parallelism (no file required)."""
+    dag = DAG.from_nodes([
+        Node("gen", Role.ACTOR, NodeType.GENERATE,
+             parallelism={"dp": 16, "tp": 2}),
+        Node("train", Role.ACTOR, NodeType.MODEL_TRAIN, deps=("gen",),
+             parallelism={"dp": 4, "tp": 8}),
+    ])
+    for dag2 in (DAG.loads(dag.to_json()), DAG.from_spec(dag.to_spec())):
+        assert set(dag2.nodes) == set(dag.nodes)
+        for nid, n in dag.nodes.items():
+            m = dag2.nodes[nid]
+            assert (m.role, m.type, m.deps, m.parallelism) == (
+                n.role, n.type, n.deps, n.parallelism)
+    assert dag.to_spec() == DAG.from_spec(dag.to_spec()).to_spec()
+
+
+def test_dag_from_spec_rejects_malformed():
+    import pytest as _pytest
+
+    with _pytest.raises(DAGError, match="nodes"):
+        DAG.from_spec({"not_nodes": []})
+
+
 # --------------------------------------------------------------------------- #
 # planner (paper Fig. 4)
 # --------------------------------------------------------------------------- #
@@ -99,6 +124,29 @@ def test_registry_resolution_and_extension():
     assert calls == ["rm"]
     with pytest.raises(KeyError):
         reg.register(Role.REWARD, NodeType.MODEL_INFERENCE, lambda: None)
+
+
+def test_registry_miss_lists_keys_and_nearest_match():
+    """An unbound (Role, NodeType) lookup names the registered keys and the
+    nearest match instead of a bare miss."""
+    reg = default_registry()
+    n = Node("dn", Role.DATA, NodeType.COMPUTE)  # DATA/COMPUTE is unbound
+    with pytest.raises(KeyError) as ei:
+        reg.resolve(n)
+    msg = str(ei.value)
+    assert "dn" in msg
+    assert "Registered keys" in msg and "actor/generate" in msg
+    assert "Nearest match" in msg  # e.g. reward/compute or advantage/compute
+
+
+def test_registry_duplicate_register_error_is_actionable():
+    reg = default_registry()
+    with pytest.raises(KeyError) as ei:
+        reg.register(Role.ACTOR, NodeType.GENERATE, lambda *a: {})
+    msg = str(ei.value)
+    assert "override=True" in msg
+    assert "actor_generate" in msg  # names the currently-bound function
+    assert "Registered keys" in msg
 
 
 # --------------------------------------------------------------------------- #
