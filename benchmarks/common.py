@@ -34,12 +34,12 @@ def tiny_cfg(arch: str = "qwen2.5-7b", **kw):
 
 
 def bench_pipeline(cfg, rl: RLConfig, *, centralized: bool = False,
-                   coordinator=None, iters: int = 3,
+                   coordinator=None, async_pipeline=None, iters: int = 3,
                    prompts_per_iter: int = 8, warmup: int = 1, seed: int = 0):
     """Returns (s_per_iter, tokens_per_iter, pipeline, timed_history)."""
     pipe = build_pipeline(cfg, rl, prompts_per_iter=prompts_per_iter,
                           centralized=centralized, coordinator=coordinator,
-                          seed=seed)
+                          async_pipeline=async_pipeline, seed=seed)
     for _ in range(warmup):
         pipe.run(1)
     pipe.buffer.stats.reset()

@@ -15,6 +15,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main() -> None:
     from benchmarks import (
         algorithms,
+        async_pipeline,
         coordinator,
         fig09_ppo_throughput,
         fig10_grpo_throughput,
@@ -34,6 +35,7 @@ def main() -> None:
         ("fig13", fig13_long_context.main),
         ("fig14", fig14_convergence.main),
         ("coordinator", coordinator.main),
+        ("async_pipeline", async_pipeline.main),
         ("algorithms", algorithms.main),
         ("roofline", roofline.main),
     ]

@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Execute every ```python fence in the shipped docs against src/.
+
+Documentation code that nobody runs drifts: an API rename that misses a doc
+page ships a broken example (the PR-2 migration nearly did exactly this).
+This checker extracts every fenced code block whose info string is exactly
+``python`` from README.md and docs/*.md and executes it — fences in the same
+file share one namespace, top to bottom, so examples may build on earlier
+ones exactly as a reader would run them.
+
+Conventions:
+  * ```python        — executed (must run cleanly against src/)
+  * ```python no-check — rendered as Python by GitHub, never executed
+                         (for deliberately illustrative fragments)
+  * any other info string (json, bash, mermaid, text, none) — ignored
+
+Usage:
+  python scripts/check_docs.py             # README.md + docs/*.md
+  python scripts/check_docs.py FILE [...]  # explicit files (tests use this)
+
+Exit status is non-zero if any fence fails; failures print the file, the
+fence's line number, and the traceback. Wired into scripts/ci.sh as its own
+parallel chunk.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+import traceback
+from typing import List, Tuple
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def extract_fences(text: str) -> List[Tuple[int, str, str]]:
+    """(opener_line, info_string, body) for every fenced code block."""
+    fences = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        stripped = lines[i].strip()
+        if stripped.startswith("```") and stripped != "```":
+            info = stripped[3:].strip()
+            body, opener = [], i + 1  # 1-indexed line of the ``` opener
+            i += 1
+            while i < len(lines) and lines[i].strip() != "```":
+                body.append(lines[i])
+                i += 1
+            fences.append((opener, info, "\n".join(body)))
+        i += 1
+    return fences
+
+
+def check_file(path: pathlib.Path) -> List[str]:
+    """Run the file's python fences in one shared namespace; return errors."""
+    errors = []
+    namespace: dict = {"__name__": "__check_docs__"}
+    for lineno, info, body in extract_fences(path.read_text()):
+        if info != "python":
+            continue
+        t0 = time.perf_counter()
+        try:
+            code = compile(body, f"{path}:{lineno}", "exec")
+            exec(code, namespace)  # noqa: S102 - executing our own docs
+            status = "ok"
+        except Exception:
+            errors.append(
+                f"{path}:{lineno}: fence failed\n{traceback.format_exc()}"
+            )
+            status = "FAIL"
+        print(
+            f"[check_docs] {path.relative_to(REPO) if path.is_relative_to(REPO) else path}"
+            f":{lineno} {status} ({time.perf_counter() - t0:.1f}s)",
+            flush=True,
+        )
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*", type=pathlib.Path,
+                    help="markdown files to check (default: README.md + docs/*.md)")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, str(REPO / "src"))
+    paths = args.paths or [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+    all_errors = []
+    for path in paths:
+        all_errors.extend(check_file(path))
+    if all_errors:
+        print("\n".join(all_errors), file=sys.stderr)
+        print(f"[check_docs] {len(all_errors)} fence(s) FAILED", flush=True)
+        return 1
+    print(f"[check_docs] all python fences pass ({len(paths)} files)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

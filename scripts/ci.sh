@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 verify: the full pytest suite sharded into parallel file chunks.
+# Tier-1 verify: the full pytest suite sharded into parallel file chunks,
+# plus the docs checker (scripts/check_docs.py) as its own chunk.
 #
 # The suite is ~18 min serially; CI runners cap a single command at ~10 min.
 # This script splits the test files into chunks balanced by observed runtime
@@ -7,7 +8,17 @@
 # pytest processes. Any test file not named in a chunk is auto-appended to
 # the last chunk, so new test files are never silently skipped.
 #
+# Every chunk reports its wall time ("ok in 412s") so drift toward the
+# 10-min cap is visible before it breaks CI, and the script exits non-zero
+# if ANY chunk fails (verified by tests/test_tooling.py with an
+# intentionally failing chunk).
+#
 #   bash scripts/ci.sh            # run everything, exit non-zero on failure
+#   CI_CHUNKS='tests/a.py;tests/b.py tests/c.py' bash scripts/ci.sh
+#                                 # override the chunk list (';'-separated
+#                                 # chunks of pytest args) — used by the
+#                                 # tooling tests; disables auto-append and
+#                                 # the docs chunk
 #
 # This is the documented verify command (see [tool.distflow] in
 # pyproject.toml).
@@ -15,46 +26,75 @@ set -u
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# Chunks balanced by runtime: the learning/convergence tests, the
-# subprocess-heavy multidevice file, and the kernel sweeps dominate.
-CHUNKS=(
-  "tests/test_pipeline.py tests/test_rl.py tests/test_extensions.py"
-  "tests/test_multidevice.py tests/test_core.py tests/test_ft.py tests/test_coordinator.py"
-  "tests/test_kernels.py tests/test_kernels_hypothesis.py tests/test_property.py tests/test_models_units.py"
-  "tests/test_algorithms.py tests/test_benchmarks.py tests/test_sharding.py tests/test_arch_smoke.py tests/test_workloads.py"
-)
+if [[ -n "${CI_CHUNKS:-}" ]]; then
+  IFS=';' read -r -a CHUNKS <<<"$CI_CHUNKS"
+  run_docs=0
+else
+  # Chunks balanced by runtime: the learning/convergence tests, the
+  # subprocess-heavy multidevice file, and the kernel sweeps dominate.
+  CHUNKS=(
+    "tests/test_pipeline.py tests/test_rl.py tests/test_extensions.py"
+    "tests/test_multidevice.py tests/test_core.py tests/test_ft.py tests/test_coordinator.py"
+    "tests/test_kernels.py tests/test_kernels_hypothesis.py tests/test_property.py tests/test_models_units.py tests/test_async_pipeline.py tests/test_tooling.py"
+    "tests/test_algorithms.py tests/test_benchmarks.py tests/test_sharding.py tests/test_arch_smoke.py tests/test_workloads.py"
+  )
+  run_docs=1
 
-# append any unlisted test file to the last chunk
-listed=" ${CHUNKS[*]} "
-extra=""
-for f in tests/test_*.py; do
-  [[ "$listed" == *" $f "* ]] || extra="$extra $f"
-done
-if [[ -n "$extra" ]]; then
-  echo "[ci] unlisted test files appended to final chunk:$extra"
-  CHUNKS[$((${#CHUNKS[@]} - 1))]+="$extra"
+  # append any unlisted test file to the last chunk
+  listed=" ${CHUNKS[*]} "
+  extra=""
+  for f in tests/test_*.py; do
+    [[ "$listed" == *" $f "* ]] || extra="$extra $f"
+  done
+  if [[ -n "$extra" ]]; then
+    echo "[ci] unlisted test files appended to final chunk:$extra"
+    CHUNKS[$((${#CHUNKS[@]} - 1))]+="$extra"
+  fi
 fi
 
 logdir="$(mktemp -d "${TMPDIR:-/tmp}/ci-logs.XXXXXX")"
-echo "[ci] ${#CHUNKS[@]} parallel chunks; logs in $logdir"
+njobs=$((${#CHUNKS[@]} + run_docs))
+echo "[ci] $njobs parallel chunks; logs in $logdir"
 
+# Each chunk runs in a background subshell that records its own wall time;
+# the subshell's exit code is the underlying command's, so `wait` propagates
+# any failure to the final exit status.
 pids=()
+names=()
 i=0
 for chunk in "${CHUNKS[@]}"; do
   i=$((i + 1))
-  (python -m pytest -q $chunk >"$logdir/chunk$i.log" 2>&1) &
+  (
+    t0=$(date +%s)
+    python -m pytest -q $chunk >"$logdir/chunk$i.log" 2>&1
+    rc=$?
+    echo $(($(date +%s) - t0)) >"$logdir/chunk$i.time"
+    exit $rc
+  ) &
   pids+=($!)
+  names+=("chunk$i")
 done
+if [[ $run_docs -eq 1 ]]; then
+  (
+    t0=$(date +%s)
+    python scripts/check_docs.py >"$logdir/docs.log" 2>&1
+    rc=$?
+    echo $(($(date +%s) - t0)) >"$logdir/docs.time"
+    exit $rc
+  ) &
+  pids+=($!)
+  names+=("docs")
+fi
 
 status=0
 for idx in "${!pids[@]}"; do
-  n=$((idx + 1))
-  log="$logdir/chunk$n.log"
+  n="${names[$idx]}"
+  log="$logdir/$n.log"
   if wait "${pids[$idx]}"; then
-    echo "[ci] chunk$n ok: $(tail -n 1 "$log")"
+    echo "[ci] $n ok in $(cat "$logdir/$n.time")s: $(tail -n 1 "$log")"
   else
     status=1
-    echo "[ci] chunk$n FAILED: $(tail -n 1 "$log")"
+    echo "[ci] $n FAILED in $(cat "$logdir/$n.time")s: $(tail -n 1 "$log")"
     echo "----- last 40 lines of $log -----"
     tail -n 40 "$log"
   fi

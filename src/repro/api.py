@@ -2,8 +2,8 @@
 
 An ExperimentSpec is the single serializable description of an RL
 post-training run — model architecture, algorithm + hyperparameters, data
-coordinator flags, mesh/parallelism, and (optionally) a custom DAG in its
-JSON-dict form. ``compile()`` turns it into a runnable
+coordinator flags, async-pipeline flags, mesh/parallelism, and (optionally)
+a custom DAG in its JSON-dict form. ``compile()`` turns it into a runnable
 :class:`~repro.core.pipeline.Pipeline`; ``to_dict``/``from_dict`` (and the
 JSON string forms) round-trip losslessly, so a whole experiment can live in a
 config file, travel over the wire, or be diffed between runs.
@@ -26,7 +26,11 @@ import dataclasses
 import json
 from typing import Any, Dict, Optional, Tuple
 
-from repro.configs.base import DataCoordinatorConfig, ModelConfig
+from repro.configs.base import (
+    AsyncPipelineConfig,
+    DataCoordinatorConfig,
+    ModelConfig,
+)
 from repro.rl.trainer import RLConfig
 
 
@@ -45,6 +49,9 @@ class ExperimentSpec:
     rl: RLConfig = dataclasses.field(default_factory=RLConfig)
     coordinator: DataCoordinatorConfig = dataclasses.field(
         default_factory=DataCoordinatorConfig
+    )
+    async_pipeline: AsyncPipelineConfig = dataclasses.field(
+        default_factory=AsyncPipelineConfig
     )
     mesh_shape: Optional[Tuple[int, ...]] = None
     mesh_axes: Tuple[str, ...] = ("data", "model")
@@ -69,6 +76,7 @@ class ExperimentSpec:
             "model": dataclasses.asdict(self.model),
             "rl": dataclasses.asdict(self.rl),
             "coordinator": dataclasses.asdict(self.coordinator),
+            "async_pipeline": dataclasses.asdict(self.async_pipeline),
             "mesh_shape": list(self.mesh_shape) if self.mesh_shape else None,
             "mesh_axes": list(self.mesh_axes),
             "prompts_per_iter": self.prompts_per_iter,
@@ -84,6 +92,7 @@ class ExperimentSpec:
             model=ModelConfig(**d["model"]),
             rl=RLConfig(**d.get("rl", {})),
             coordinator=DataCoordinatorConfig(**d.get("coordinator", {})),
+            async_pipeline=AsyncPipelineConfig(**d.get("async_pipeline", {})),
             mesh_shape=tuple(mesh_shape) if mesh_shape else None,
             mesh_axes=tuple(d.get("mesh_axes", ("data", "model"))),
             prompts_per_iter=d.get("prompts_per_iter", 8),
@@ -127,6 +136,7 @@ class ExperimentSpec:
             prompts_per_iter=self.prompts_per_iter,
             centralized=self.centralized,
             coordinator=self.coordinator,
+            async_pipeline=self.async_pipeline,
             registry=registry,
             algorithm=self.algorithm,
             seed=self.seed,

@@ -1,4 +1,5 @@
 from repro.configs.base import (
+    AsyncPipelineConfig,
     DataCoordinatorConfig,
     ModelConfig,
     ShapeConfig,

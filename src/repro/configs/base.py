@@ -227,6 +227,38 @@ class DataCoordinatorConfig:
 
 
 # --------------------------------------------------------------------------- #
+# Async off-policy pipeline v2 (beyond-paper: AsyncFlow / LlamaRL-style
+# staleness-bounded generation/training overlap on the DistFlow DAG).
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class AsyncPipelineConfig:
+    """Flags for the staleness-bounded off-policy scheduler
+    (``core/async_worker.AsyncDAGWorker``). Off by default; ``enabled=True``
+    with ``max_staleness=0`` runs the scheduler in lockstep and is
+    bitwise-identical to the synchronous path (a property the test suite
+    asserts).
+
+    ``max_staleness`` is the hard bound on how many actor updates the
+    behaviour policy of a consumed batch may lag the trainer: the batch
+    trained at weight version ``v`` must have been generated at version
+    ``>= v - max_staleness``. Generation dispatch is *gated* on this bound —
+    when the trainer falls behind, the rollout side stalls rather than let
+    trajectories go staler than the window (see ``docs/async_pipeline.md``).
+    """
+
+    enabled: bool = False
+    # staleness window: 0 = fully on-policy lockstep (bitwise-identical to
+    # the sync path); 1 = one-step overlap (AsyncFlow/LlamaRL's sweet spot)
+    max_staleness: int = 0
+
+    def __post_init__(self):
+        if self.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {self.max_staleness}"
+            )
+
+
+# --------------------------------------------------------------------------- #
 # Input shapes (assigned): every LM arch carries the same four shape cells.
 # --------------------------------------------------------------------------- #
 @dataclass(frozen=True)

@@ -9,4 +9,4 @@ from repro.core.databuffer import (
 from repro.core.registry import Registry, default_registry
 from repro.core.worker import DAGWorker, WorkerContext
 from repro.core.pipeline import Pipeline, build_pipeline, grpo_dag, ppo_dag
-from repro.core.async_worker import PipelinedDAGWorker
+from repro.core.async_worker import AsyncDAGWorker, PipelinedDAGWorker

@@ -1,66 +1,291 @@
-"""One-step-off-policy pipelined DAG worker (beyond-paper extension).
+"""Async off-policy pipeline v2: staleness-bounded generation/training overlap.
 
-The paper's related work (StreamRL, AReaL) revisits disaggregation with
-asynchronous pipelines: generation for iteration i+1 overlaps training of
-iteration i. This worker implements the SEMANTICS of that overlap inside the
-DistFlow execution model with bounded staleness 1:
+The paper decouples control dispatch from data movement so DAG stages execute
+independently (§5, §6.2); related systems (AsyncFlow, LlamaRL, StreamRL,
+AReaL) go one step further and overlap rollout generation for iteration t+1
+with the trainer's update for iteration t, accepting bounded off-policyness
+in exchange for hiding the smaller of the two stage times. This module is
+that scheduler on the DistFlow execution model:
 
-  * the rollout/eval stages of iteration i+1 run under the actor SNAPSHOT
-    taken before iteration i's update (the behaviour policy is one step
-    stale);
-  * the train stages consume the PREVIOUS iteration's buffered trajectories;
-  * the PPO/GRPO importance ratio exp(logpi_new - logpi_behaviour) corrects
-    the off-policyness, so the objective stays valid (ratios now deviate
-    from 1 on the first minibatch — that is the off-policy signature).
+  * the serialized chain splits at MODEL_TRAIN into a generation half and a
+    training half;
+  * generated batches queue as :class:`PendingRollout`, each tagged with the
+    behaviour policy's weight version (``distributed.weight_sync.
+    WeightVersionStore`` — the trainer publishes a new version per update);
+  * a batch consumed at trainer version v must satisfy
+    ``v - behavior_version <= max_staleness``. Generation dispatch is GATED
+    on that bound: with one update per queued batch, a batch dispatched while
+    ``len(inflight) <= max_staleness`` is consumed at staleness exactly
+    ``len(inflight)``, so the gate is ``len(inflight) <= max_staleness`` —
+    when the trainer falls behind, rollouts stall rather than go staler than
+    the window;
+  * specs with ``is_correction == "truncated"`` get the decoupled
+    importance-ratio correction on stale batches: ``old_logprob`` is
+    recomputed under the train-time (proximal) policy, the gen-time logprobs
+    ride along as ``behavior_logprob``, and the trainer truncates
+    ``exp(proximal - behaviour)`` at ``rl.is_rho_max``
+    (``trainer.apply_is_correction``).
 
-On real hardware the two halves run concurrently on disjoint resources (or
+``max_staleness=0`` runs the identical machinery in lockstep — generate,
+train the same batch, publish — and is bitwise-identical to the synchronous
+:class:`~repro.core.worker.DAGWorker` (asserted by the test suite).
+``max_staleness=1`` reproduces the one-step-off-policy pipelining of the
+previous ``PipelinedDAGWorker`` (kept below as a thin alias).
+
+On real hardware the two halves run concurrently on disjoint meshes (or
 interleaved streams); here they run sequentially with identical data and
-staleness semantics, which is what the convergence test checks. The expected
-wall-clock win is max(t_gen, t_train) instead of t_gen + t_train.
+staleness semantics. Each iteration reports what the overlap would hide:
+``async/overlap_s = min(t_gen, t_train)`` whenever the trained batch is not
+the one generated this iteration, and the benchmark arm
+(``benchmarks/async_pipeline.py``) turns that into overlap ratio / projected
+speedup vs the sync arm.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, Optional
 
+from repro.configs.base import AsyncPipelineConfig
 from repro.core.dag import NodeType
 from repro.core.worker import DAGWorker
+from repro.distributed.weight_sync import WeightVersionStore
 
 
-class PipelinedDAGWorker(DAGWorker):
-    def __init__(self, ctx, plan, registry, buffer, coordinator=None):
+@dataclass
+class PendingRollout:
+    """One generated batch waiting for the trainer: the popped buffer
+    contents, the weight version of the behaviour policy that produced it,
+    and the wall-clock the generation half took (for overlap accounting)."""
+
+    data: Dict[str, Any]
+    behavior_version: int
+    gen_seconds: float = 0.0
+
+
+class AsyncDAGWorker(DAGWorker):
+    """Staleness-bounded off-policy scheduler over the serialized DAG chain.
+
+    ``clock`` is injectable (defaults to ``time.perf_counter``) so tests can
+    drive the scheduler under a fake clock; the staleness gate itself is
+    count-based and independent of time. ``dispatch_generation`` /
+    ``consume_and_train`` are public so a driver (or test) can decouple the
+    two halves — e.g. a slow trainer that stops consuming while generation
+    keeps dispatching until the gate stalls it.
+    """
+
+    def __init__(
+        self,
+        ctx,
+        plan,
+        registry,
+        buffer,
+        coordinator=None,
+        *,
+        async_cfg: Optional[AsyncPipelineConfig] = None,
+        clock=None,
+    ):
         super().__init__(ctx, plan, registry, buffer, coordinator)
-        self._rollout_state = None  # actor snapshot for the behaviour policy
-        self._pending: Optional[Dict] = None  # buffered trajectories
-        # split the chain at the first MODEL_TRAIN node
+        self.async_cfg = async_cfg or AsyncPipelineConfig(
+            enabled=True, max_staleness=1
+        )
+        self.clock = clock or time.perf_counter
+        # split the chain at MODEL_TRAIN: everything else is the rollout half.
+        # The split only preserves execution order (and the max_staleness=0
+        # bitwise-identity contract) when the train nodes close the serialized
+        # chain — reject DAGs with post-update nodes instead of silently
+        # reordering them ahead of the update.
+        types = [n.type for n, _ in self.queue]
+        if NodeType.MODEL_TRAIN in types:
+            first_train = types.index(NodeType.MODEL_TRAIN)
+            trailing = [
+                n.node_id for (n, _) in self.queue[first_train:]
+                if n.type != NodeType.MODEL_TRAIN
+            ]
+            if trailing:
+                raise ValueError(
+                    "async pipeline requires MODEL_TRAIN nodes to close the "
+                    f"serialized chain; nodes {trailing} run after a train "
+                    "node and would be reordered — run this DAG with the "
+                    "synchronous worker (async_pipeline disabled)"
+                )
         self.gen_queue = [
             (n, f) for n, f in self.queue if n.type != NodeType.MODEL_TRAIN
         ]
         self.train_queue = [
             (n, f) for n, f in self.queue if n.type == NodeType.MODEL_TRAIN
         ]
+        self._inflight: Deque[PendingRollout] = deque()
+        self.train_steps = 0
+        # version 0 = the pre-update weights, published lazily at the first
+        # dispatch (not here: callers replace ctx.actor_state between
+        # construction and the first iteration — checkpoint resume, elastic
+        # restart — and generation must follow)
+        self.weights = WeightVersionStore()
 
-    def run_iteration(self) -> Dict[str, float]:
-        metrics: Dict[str, float] = {}
-        # --- generation + eval under the STALE snapshot -------------------
-        live_state = self.ctx.actor_state
-        if self._rollout_state is not None:
-            self.ctx.actor_state = self._rollout_state
-        for node, fn in self.gen_queue:
-            self.execute_node(node, fn, metrics)
-        self.ctx.actor_state = live_state
-        fresh = {k: self.buffer.pop(k) for k in list(self.buffer.keys())}
+    # ------------------------------------------------------------------ #
+    @property
+    def max_staleness(self) -> int:
+        return self.async_cfg.max_staleness
 
-        # --- train on the PREVIOUS iteration's trajectories ----------------
-        if self._pending is not None:
-            for k, v in self._pending.items():
-                self.buffer.put(k, v)
-            for node, fn in self.train_queue:
+    def can_dispatch_generation(self) -> bool:
+        """The staleness gate. FIFO consumption trains the batch dispatched
+        now after one update per batch already queued ahead of it, i.e. at
+        staleness ``len(inflight)`` — dispatch is allowed only while that
+        cannot exceed the bound."""
+        return len(self._inflight) <= self.max_staleness
+
+    def _behavior_weights(self):
+        """The behaviour policy for the next dispatch: the latest published
+        weights. Version 0 is published lazily here, not at construction, so
+        an externally replaced ctx.actor_state — checkpoint resume, elastic
+        restart — is what the first generation runs, instead of the
+        discarded init weights."""
+        if self.weights.current is None:
+            self.weights.publish(
+                self.ctx.actor_state.params
+                if self.ctx.actor_state is not None else None
+            )
+        return self.weights.current
+
+    def dispatch_generation(
+        self, metrics: Optional[Dict[str, float]] = None
+    ) -> Optional[PendingRollout]:
+        """Run the generation half under the latest published weights and
+        queue the batch, unless the staleness gate stalls it (returns None)."""
+        metrics = {} if metrics is None else metrics
+        if not self.can_dispatch_generation():
+            metrics["async/gen_stalled"] = 1.0
+            return None
+        t0 = self.clock()
+        behavior = self._behavior_weights()
+        live = self.ctx.actor_state
+        if (
+            behavior is not None
+            and behavior.params is not None
+            and live is not None
+            and behavior.params is not live.params
+        ):
+            # generation always runs the published snapshot, not the live
+            # trainer state (they coincide in this sequential simulation)
+            self.ctx.actor_state = live._replace(params=behavior.params)
+        try:
+            for node, fn in self.gen_queue:
                 self.execute_node(node, fn, metrics)
-            self.buffer.clear()
-        self._pending = fresh
-        # snapshot the (just-updated) actor as the next behaviour policy:
-        # generation i+1 overlaps training i+1 on real hardware, so its
-        # freshest available policy is the one that produced _pending
-        self._rollout_state = self.ctx.actor_state
-        metrics["pipeline/staleness"] = 1.0 if self._pending else 0.0
+        finally:
+            self.ctx.actor_state = live
+        data = {k: self.buffer.pop(k) for k in list(self.buffer.keys())}
+        pending = PendingRollout(
+            data=data,
+            behavior_version=self.weights.version,
+            gen_seconds=self.clock() - t0,
+        )
+        self._inflight.append(pending)
+        metrics["async/inflight"] = float(len(self._inflight))
+        return pending
+
+    def train_ready(self) -> bool:
+        """A batch is consumed only once the pipeline is ``max_staleness``
+        deep, so warmup iterations are generation-only and steady-state
+        consumption runs at exactly the configured staleness."""
+        return len(self._inflight) > self.max_staleness
+
+    def consume_and_train(
+        self, metrics: Optional[Dict[str, float]] = None
+    ) -> Optional[PendingRollout]:
+        """Train on the oldest queued batch, publish the new weight version,
+        and report the batch's realized staleness."""
+        metrics = {} if metrics is None else metrics
+        if not self._inflight:
+            return None
+        pending = self._inflight.popleft()
+        staleness = self.weights.version - pending.behavior_version
+        if staleness > self.max_staleness:
+            raise RuntimeError(
+                f"staleness bound violated: batch generated at version "
+                f"{pending.behavior_version} consumed at version "
+                f"{self.weights.version} (max_staleness={self.max_staleness})"
+            )
+        t0 = self.clock()
+        data = dict(pending.data)
+        from repro.rl import algorithms
+
+        spec = algorithms.resolve(self.ctx)
+        corrected = (
+            spec.is_correction == "truncated"
+            and staleness > 0
+            and "old_logprob" in data
+            and "tokens" in data
+            and "response_mask" in data
+        )
+        if corrected:
+            # decoupled correction: old_logprob becomes the train-time
+            # (proximal) policy's logprobs; the behaviour policy's move to
+            # behavior_logprob for the truncated-IS weight
+            lp, _ = self.ctx.engines["logprobs"](
+                self.ctx.actor_state.params, data["tokens"]
+            )
+            data["behavior_logprob"] = data["old_logprob"]
+            data["old_logprob"] = lp * data["response_mask"]
+        for k, v in data.items():
+            self.buffer.put(k, v)
+        for node, fn in self.train_queue:
+            self.execute_node(node, fn, metrics)
+        # self-clean the consumed batch: run_iteration clears (rotates) per
+        # tick anyway, but a driver using the decoupled dispatch/consume API
+        # must not have this batch's keys — behavior_logprob in particular —
+        # leak into the next dispatch's pop and poison another batch
+        for k in data:
+            if k in self.buffer.keys():
+                self.buffer.pop(k)
+        self.train_steps += 1
+        self.weights.publish(
+            self.ctx.actor_state.params
+            if self.ctx.actor_state is not None
+            else None
+        )
+        metrics["async/t_train"] = self.clock() - t0
+        metrics["async/staleness"] = float(staleness)
+        metrics["async/weight_version"] = float(self.weights.version)
+        metrics["async/is_corrected"] = float(corrected)
+        return pending
+
+    # ------------------------------------------------------------------ #
+    def run_iteration(self) -> Dict[str, float]:
+        """One scheduler tick: dispatch generation if the gate allows, then
+        train on the oldest batch once the pipeline is deep enough. With
+        max_staleness=0 this is generate-then-train on the same batch (the
+        synchronous schedule); with W>=1 the trained batch predates the one
+        just generated, and on concurrent hardware the two halves overlap."""
+        metrics: Dict[str, float] = {}
+        dispatched = self.dispatch_generation(metrics)
+        consumed = None
+        if self.train_ready():
+            consumed = self.consume_and_train(metrics)
+        t_gen = dispatched.gen_seconds if dispatched is not None else 0.0
+        t_train = metrics.get("async/t_train", 0.0)
+        metrics["async/t_gen"] = t_gen
+        # overlap the concurrent schedule would realize this tick: gen(i+W)
+        # and train(i) run on disjoint resources iff they are different
+        # batches, hiding the smaller of the two stage times
+        pipelined = consumed is not None and consumed is not dispatched
+        hidden = min(t_gen, t_train) if pipelined else 0.0
+        busy = t_gen + t_train
+        metrics["async/overlap_s"] = hidden
+        metrics["async/overlap_ratio"] = hidden / busy if busy > 0 else 0.0
+        # back-compat with the pre-v2 PipelinedDAGWorker metric
+        metrics["pipeline/staleness"] = metrics.get("async/staleness", 0.0)
+        self.buffer.clear()  # intermediate data is transient (paper §6)
         return metrics
+
+
+class PipelinedDAGWorker(AsyncDAGWorker):
+    """The pre-v2 one-step-off-policy worker: AsyncDAGWorker pinned at
+    ``max_staleness=1`` (kept for API compatibility)."""
+
+    def __init__(self, ctx, plan, registry, buffer, coordinator=None):
+        super().__init__(
+            ctx, plan, registry, buffer, coordinator,
+            async_cfg=AsyncPipelineConfig(enabled=True, max_staleness=1),
+        )

@@ -23,7 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.configs.base import DataCoordinatorConfig, ModelConfig
+from repro.configs.base import (
+    AsyncPipelineConfig,
+    DataCoordinatorConfig,
+    ModelConfig,
+)
 from repro.core.dag import DAG
 from repro.core.databuffer import (
     CentralizedDatabuffer,
@@ -117,6 +121,7 @@ def build_pipeline(
     prompts_per_iter: int = 8,
     centralized: bool = False,
     coordinator: Optional[DataCoordinatorConfig] = None,
+    async_pipeline: Optional[AsyncPipelineConfig] = None,
     registry: Optional[Registry] = None,
     algorithm=None,
     seed: int = 0,
@@ -168,6 +173,19 @@ def build_pipeline(
     else:
         buffer_cls = DistributedDatabuffer
     buffer = buffer_cls(mesh)
-    worker = DAGWorker(ctx, plan, registry or default_registry(), buffer,
-                       coordinator)
+    if async_pipeline is not None and async_pipeline.enabled:
+        if centralized:
+            raise ValueError(
+                "the centralized baseline gathers every stage output through "
+                "one controller and is inherently synchronous; async_pipeline "
+                "cannot be combined with centralized=True"
+            )
+        from repro.core.async_worker import AsyncDAGWorker
+
+        worker = AsyncDAGWorker(ctx, plan, registry or default_registry(),
+                                buffer, coordinator,
+                                async_cfg=async_pipeline)
+    else:
+        worker = DAGWorker(ctx, plan, registry or default_registry(), buffer,
+                           coordinator)
     return Pipeline(worker=worker, ctx=ctx, buffer=buffer, dag=dag, plan=plan)

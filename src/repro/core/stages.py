@@ -135,6 +135,10 @@ def actor_train(ctx, buffer, node: Node) -> Dict:
         else:
             # reference-free DAG variant (custom_dag example): KL term is 0
             batch["ref_logprob"] = batch["old_logprob"]
+    if "behavior_logprob" in buffer.keys():
+        # stale batch from the async scheduler: gen-time logprobs ride along
+        # for the decoupled truncated-IS correction (trainer.apply_is_correction)
+        batch["behavior_logprob"] = buffer.get("behavior_logprob", model_spec)
     ctx.actor_state, metrics = ctx.engines["actor_step"](ctx.actor_state, batch)
     return {f"actor/{k}": float(v) for k, v in metrics.items()}
 

@@ -15,7 +15,8 @@ iteration — amortized over the whole generation stage.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+import dataclasses
+from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -32,6 +33,75 @@ def switch(mesh: Mesh, params, target_specs) -> Any:
     """Reshard a param pytree to the target stage layout (peer collectives)."""
     shardings = shr.named(mesh, target_specs)
     return jax.tree.map(jax.device_put, params, shardings)
+
+
+# --------------------------------------------------------------------------- #
+# Weight-version tagging (async off-policy pipeline v2).
+#
+# In the staleness-bounded scheduler the trainer and the rollout engine no
+# longer share one implicit "current" set of weights: the trainer PUBLISHES a
+# new version after every update, and every rollout batch is tagged with the
+# version it was generated under, so the scheduler can measure and bound the
+# off-policy staleness (trainer_version - behaviour_version). On disaggregated
+# hardware the publish IS the train->serve ``switch`` above; the store threads
+# the version tag through that reshard so tags stay attached to the weights
+# they describe.
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class VersionedWeights:
+    """A param pytree plus the monotone version tag it was published under."""
+
+    params: Any
+    version: int
+
+
+class WeightVersionStore:
+    """Single-writer, monotone-version weight publication point.
+
+    The trainer calls :meth:`publish` once per update; generation reads
+    :attr:`current` (params + tag). Versions must strictly increase — a
+    regression means two writers or a re-publish of stale weights, both of
+    which would silently corrupt staleness accounting, so the store raises.
+    """
+
+    def __init__(self):
+        self._current: Optional[VersionedWeights] = None
+
+    @property
+    def current(self) -> Optional[VersionedWeights]:
+        return self._current
+
+    @property
+    def version(self) -> int:
+        """The latest published version; -1 before the first publish."""
+        return -1 if self._current is None else self._current.version
+
+    def publish(
+        self,
+        params,
+        *,
+        version: Optional[int] = None,
+        mesh: Optional[Mesh] = None,
+        target_specs=None,
+    ) -> VersionedWeights:
+        """Publish ``params`` under the next version (or an explicit one).
+
+        With ``mesh`` + ``target_specs`` the params are resharded to the serve
+        layout via :func:`switch` on the way — the colocated train->serve
+        weight switch with the version tag riding along.
+        """
+        v = self.version + 1 if version is None else version
+        if v <= self.version:
+            raise ValueError(
+                f"weight versions must be strictly monotone: "
+                f"got {v} after {self.version}"
+            )
+        if target_specs is not None:
+            if mesh is None:
+                raise ValueError("target_specs requires a mesh")
+            params = switch(mesh, params, target_specs)
+        self._current = VersionedWeights(params=params, version=v)
+        return self._current
 
 
 def switch_bytes(cfg: ModelConfig, mesh: Mesh, params_shape,

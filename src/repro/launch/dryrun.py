@@ -235,6 +235,17 @@ def main(argv=None):
             exp = ExperimentSpec.from_json(f.read())
         cfg_override = exp.model
         args.arch = args.arch or cfg_override.name
+        if exp.async_pipeline.enabled:
+            # the async scheduler changes the iteration schedule, not any
+            # per-cell compile/memory cost — note it so the operator knows
+            # which arm prices the overlap (benchmarks/async_pipeline.py)
+            print(
+                f"[dryrun] experiment enables async pipeline "
+                f"(max_staleness={exp.async_pipeline.max_staleness}); "
+                "per-cell costs below are schedule-independent — "
+                "benchmarks/async_pipeline.py prices the overlap",
+                flush=True,
+            )
 
     cells = []
     if args.all:

@@ -14,15 +14,17 @@ Usage:
   python -m repro.launch.train --arch qwen2.5-7b --algorithm grpo \
       --iters 500 --ckpt-dir ckpts/ [--resume ckpts/] [--smoke]
   python -m repro.launch.train --experiment exp.json --iters 100
+  python -m repro.launch.train --smoke --max-staleness 1   # async pipeline v2
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
 from repro.api import ExperimentSpec
-from repro.configs import get_config, reduced
+from repro.configs import AsyncPipelineConfig, get_config, reduced
 from repro.distributed import sharding as shr
 from repro.ft import checkpoint
 from repro.launch.mesh import make_local_mesh
@@ -35,7 +37,17 @@ def build_experiment(args) -> ExperimentSpec:
     """CLI flags -> ExperimentSpec (or load one wholesale from JSON)."""
     if args.experiment:
         with open(args.experiment) as f:
-            return ExperimentSpec.from_json(f.read())
+            exp = ExperimentSpec.from_json(f.read())
+        if args.max_staleness is not None:
+            # CLI overrides the file, like the usage line documents — don't
+            # let the flag be silently swallowed by the JSON's setting
+            exp = dataclasses.replace(
+                exp,
+                async_pipeline=AsyncPipelineConfig(
+                    enabled=True, max_staleness=args.max_staleness
+                ),
+            )
+        return exp
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg, vocab_size=260, num_layers=2)
@@ -50,9 +62,15 @@ def build_experiment(args) -> ExperimentSpec:
         from repro.core import DAG
 
         dag = DAG.from_json(args.dag_json).to_spec()
+    async_pipeline = AsyncPipelineConfig()
+    if args.max_staleness is not None:
+        async_pipeline = AsyncPipelineConfig(
+            enabled=True, max_staleness=args.max_staleness
+        )
     return ExperimentSpec(
         model=cfg,
         rl=rl,
+        async_pipeline=async_pipeline,
         prompts_per_iter=args.prompts_per_iter,
         centralized=args.centralized_baseline,
         seed=args.seed,
@@ -74,6 +92,10 @@ def main(argv=None) -> None:
     ap.add_argument("--resume", default=None)
     ap.add_argument("--centralized-baseline", action="store_true",
                     help="run the single-controller arm (comparisons)")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="enable the async off-policy pipeline with this "
+                         "staleness bound (0 = lockstep scheduler, bitwise-"
+                         "identical to sync; see docs/async_pipeline.md)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced model config (CPU-sized)")
     ap.add_argument("--seed", type=int, default=0)

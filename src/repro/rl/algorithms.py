@@ -119,7 +119,24 @@ class AlgorithmSpec:
     # actor batch carries ref_logprob (falls back to old_logprob when the DAG
     # has no reference node — the zero-KL variant)
     needs_reference: bool = False
+    # off-policy correction under the async pipeline (docs/async_pipeline.md):
+    #   "none"      — train stale batches as-is (the PPO/GRPO ratio vs the
+    #                 behaviour logprobs absorbs the staleness);
+    #   "truncated" — decoupled truncated importance sampling: the scheduler
+    #                 recomputes old_logprob under the train-time (proximal)
+    #                 policy and the trainer weights the surrogate by
+    #                 min(exp(proximal - behaviour), rl.is_rho_max).
+    # Only consulted for batches whose staleness is >= 1; the synchronous
+    # path and max_staleness=0 never see it.
+    is_correction: str = "none"
     description: str = ""
+
+    def __post_init__(self):
+        if self.is_correction not in ("none", "truncated"):
+            raise ValueError(
+                f"is_correction must be 'none' or 'truncated', "
+                f"got {self.is_correction!r}"
+            )
 
     @property
     def uses_critic(self) -> bool:

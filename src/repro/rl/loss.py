@@ -66,6 +66,29 @@ def grpo_loss(
     return out
 
 
+def truncated_is_weights(
+    proximal_logprob: jax.Array,  # (B,T) policy at batch receipt (train time)
+    behavior_logprob: jax.Array,  # (B,T) policy that generated the batch
+    mask: jax.Array,  # (B,T)
+    *,
+    rho_max: float = 2.0,
+) -> Dict[str, jax.Array]:
+    """Decoupled off-policy correction (AsyncFlow / IMPALA-style): the
+    per-token importance ratio between the train-time (proximal) policy and
+    the stale behaviour policy, truncated at ``rho_max`` to bound gradient
+    variance. Both inputs are data (no gradients flow through them); the
+    weight multiplies the surrogate — equivalently the advantages, since
+    rho > 0 — leaving the PPO clip to police the proximal ratio alone."""
+    rho = jnp.exp(proximal_logprob - behavior_logprob)
+    truncated = jnp.minimum(rho, rho_max)
+    m = mask.astype(jnp.float32)
+    return {
+        "rho": truncated * m,
+        "rho_mean": _masked_mean(truncated, mask),
+        "rho_clipfrac": _masked_mean((rho > rho_max).astype(jnp.float32), mask),
+    }
+
+
 def value_loss(
     values,  # (B,T) current critic
     old_values,  # (B,T) rollout-time critic

@@ -36,6 +36,10 @@ class RLConfig:
     temperature: float = 1.0
     max_new_tokens: int = 16
     weight_decay: float = 0.0
+    # truncation bound for the decoupled importance-ratio correction applied
+    # to stale batches when the algorithm opts in (AlgorithmSpec.is_correction
+    # == "truncated"; see docs/async_pipeline.md)
+    is_rho_max: float = 2.0
 
 
 class TrainState(NamedTuple):
@@ -55,6 +59,31 @@ def _resolve_algorithm(rl: RLConfig, algorithm=None):
     return algorithms.get_algorithm(rl.algorithm)
 
 
+def apply_is_correction(
+    rl: RLConfig, spec, batch: Dict[str, jax.Array]
+) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """Decoupled truncated-IS correction for stale (off-policy) batches.
+
+    When the async scheduler hands the trainer a batch generated under an
+    older weight version AND the spec opted in (``is_correction ==
+    "truncated"``), the batch carries ``behavior_logprob`` (gen-time policy)
+    next to ``old_logprob`` (recomputed under the train-time proximal
+    policy). The correction scales the advantages by the truncated ratio
+    rho = min(exp(old - behaviour), rl.is_rho_max) — since rho > 0 this is
+    exactly weighting the clipped surrogate, while the PPO clip keeps
+    policing the proximal ratio. On-policy batches (no ``behavior_logprob``)
+    pass through untouched, so the synchronous path is unchanged."""
+    if spec.is_correction != "truncated" or "behavior_logprob" not in batch:
+        return batch, {}
+    w = losses.truncated_is_weights(
+        batch["old_logprob"], batch["behavior_logprob"],
+        batch["response_mask"], rho_max=rl.is_rho_max,
+    )
+    rho = w.pop("rho")
+    batch = dict(batch, advantages=batch["advantages"] * rho)
+    return batch, w
+
+
 def actor_loss_fn(
     model: Model, rl: RLConfig, params, batch: Dict[str, jax.Array],
     *, algorithm=None,
@@ -62,7 +91,9 @@ def actor_loss_fn(
     spec = _resolve_algorithm(rl, algorithm)
     lp, ent = model.logprobs(params, batch["tokens"], remat=True)
     mask = batch["response_mask"]
+    batch, is_metrics = apply_is_correction(rl, spec, batch)
     out = spec.actor_loss(rl, lp, batch)
+    out.update(is_metrics)
     loss = out.pop("loss")
     m = mask.astype(jnp.float32)
     out["entropy"] = jnp.sum(ent * m) / jnp.maximum(jnp.sum(m), 1.0)

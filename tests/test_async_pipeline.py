@@ -1,0 +1,430 @@
+"""Async off-policy pipeline v2 tests (docs/async_pipeline.md): bitwise
+equivalence of the lockstep scheduler vs the synchronous worker, the
+staleness gate under a stalled trainer, monotone weight-version tags through
+weight_sync, and the decoupled truncated-IS correction vs a hand-computed
+reference."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.api import ExperimentSpec
+from repro.configs import (
+    ARCHS,
+    AsyncPipelineConfig,
+    DataCoordinatorConfig,
+    reduced,
+)
+from repro.core import AsyncDAGWorker, build_pipeline
+from repro.core.async_worker import PipelinedDAGWorker
+from repro.distributed.weight_sync import WeightVersionStore
+from repro.rl import RLConfig
+from repro.rl import loss as losses
+from repro.rl import trainer
+from repro.rl.algorithms import AlgorithmSpec, get_algorithm
+from repro.utils.jax_compat import make_compat_mesh
+
+
+def mesh11():
+    return make_compat_mesh((1, 1), ("data", "model"))
+
+
+def small_cfg(**kw):
+    base = dict(vocab_size=260, num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, head_dim=16, d_ff=128)
+    base.update(kw)
+    return reduced(ARCHS["qwen2.5-7b"], **base)
+
+
+def _comparable(history):
+    """Strip scheduler-only keys: timing and async accounting differ by
+    construction; every value-bearing metric must match exactly."""
+    out = []
+    for m in history:
+        out.append({
+            k: v for k, v in m.items()
+            if not k.startswith("time/") and not k.startswith("async/")
+            and k != "pipeline/staleness"
+        })
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: max_staleness=0 (and disabled) are bitwise-identical to sync
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("algo", ["grpo", "ppo"])
+def test_staleness0_and_disabled_bitwise_identical_to_sync(algo):
+    rl = RLConfig(algorithm=algo, group_size=4, max_new_tokens=6, lr=1e-4,
+                  critic_lr=1e-4)
+    cfg = small_cfg()
+    h_sync = _comparable(build_pipeline(cfg, rl, prompts_per_iter=4,
+                                        seed=3).run(3))
+    h_off = _comparable(build_pipeline(
+        cfg, rl, prompts_per_iter=4, seed=3,
+        async_pipeline=AsyncPipelineConfig()).run(3))
+    h_s0 = _comparable(build_pipeline(
+        cfg, rl, prompts_per_iter=4, seed=3,
+        async_pipeline=AsyncPipelineConfig(enabled=True, max_staleness=0),
+    ).run(3))
+    assert h_sync == h_off  # disabled config -> the plain DAGWorker
+    for a, b in zip(h_sync, h_s0):
+        assert set(a) == set(b)
+        for k in a:
+            assert a[k] == b[k], k  # exact, not approx
+
+
+def test_disabled_uses_sync_worker_and_s0_uses_scheduler():
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4)
+    cfg = small_cfg()
+    off = build_pipeline(cfg, rl, prompts_per_iter=2,
+                         async_pipeline=AsyncPipelineConfig())
+    assert not isinstance(off.worker, AsyncDAGWorker)
+    on = build_pipeline(cfg, rl, prompts_per_iter=2,
+                        async_pipeline=AsyncPipelineConfig(enabled=True))
+    assert isinstance(on.worker, AsyncDAGWorker)
+    assert on.worker.max_staleness == 0
+
+
+def test_async_rejects_centralized_baseline():
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4)
+    with pytest.raises(ValueError, match="centralized"):
+        build_pipeline(
+            small_cfg(), rl, centralized=True,
+            async_pipeline=AsyncPipelineConfig(enabled=True, max_staleness=1),
+        )
+
+
+def test_async_config_validates():
+    with pytest.raises(ValueError):
+        AsyncPipelineConfig(max_staleness=-1)
+    with pytest.raises(ValueError):
+        AlgorithmSpec(
+            name="bad", dag_factory=lambda: None,
+            make_advantage=lambda rl: None, actor_loss=lambda rl, lp, b: {},
+            is_correction="untruncated",
+        )
+
+
+# --------------------------------------------------------------------------- #
+# the staleness bound under a stalled (slow) trainer
+# --------------------------------------------------------------------------- #
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    return clock
+
+
+@pytest.mark.parametrize("window", [0, 1, 2])
+def test_staleness_bound_never_exceeded_with_stalled_trainer(window):
+    """Generation must stall at the gate once the queue is window+1 deep —
+    a trainer that stops consuming can never see a batch staler than the
+    bound. Driven under a fake clock: the gate is count-based, not
+    time-based."""
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4, lr=1e-3)
+    pipe = build_pipeline(
+        small_cfg(), rl, prompts_per_iter=2, seed=2,
+        async_pipeline=AsyncPipelineConfig(enabled=True,
+                                           max_staleness=window),
+    )
+    w = pipe.worker
+    w.clock = _fake_clock()
+    # slow trainer: dispatch only. Exactly window+1 dispatches succeed.
+    for _ in range(window + 1):
+        assert w.dispatch_generation({}) is not None
+    stalled = {}
+    assert w.dispatch_generation(stalled) is None
+    assert stalled["async/gen_stalled"] == 1.0
+    assert len(w._inflight) == window + 1
+
+    # trainer catches up: every consumed batch obeys the bound, and each
+    # consume frees exactly one dispatch slot
+    seen = []
+    while w._inflight:
+        m = {}
+        assert w.consume_and_train(m) is not None
+        seen.append(m["async/staleness"])
+        assert m["async/staleness"] <= window
+    assert max(seen) <= window
+    assert w.dispatch_generation({}) is not None  # gate reopens
+    # weight versions advanced once per update, monotone
+    assert w.weights.version == len(seen)
+
+
+def test_interleaved_steady_state_staleness_is_exact():
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4, lr=1e-3)
+    pipe = build_pipeline(
+        small_cfg(), rl, prompts_per_iter=2, seed=5,
+        async_pipeline=AsyncPipelineConfig(enabled=True, max_staleness=2),
+    )
+    hist = pipe.run(6)
+    # warmup: the first 2 ticks are generation-only
+    assert "actor/loss" not in hist[0] and "actor/loss" not in hist[1]
+    assert "actor/loss" in hist[2]
+    # steady state runs at exactly the configured staleness
+    assert hist[4]["async/staleness"] == 2.0
+    assert hist[5]["async/staleness"] == 2.0
+    assert hist[5]["async/overlap_ratio"] > 0.0
+
+
+# --------------------------------------------------------------------------- #
+# weight-version tags through weight_sync
+# --------------------------------------------------------------------------- #
+def test_weight_version_tags_monotone_through_weight_sync():
+    mesh = mesh11()
+    params = {"w": jnp.arange(8.0).reshape(2, 4), "b": jnp.ones((4,))}
+    store = WeightVersionStore()
+    assert store.version == -1 and store.current is None
+
+    v0 = store.publish(params)
+    assert v0.version == 0 and store.current is v0
+    # publish through the train->serve switch: the tag rides the reshard
+    specs = {"w": P(), "b": P()}
+    v1 = store.publish(params, mesh=mesh, target_specs=specs)
+    assert v1.version == 1
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(v1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # regressions and duplicates are rejected — tags are strictly monotone
+    with pytest.raises(ValueError, match="monotone"):
+        store.publish(params, version=1)
+    with pytest.raises(ValueError, match="monotone"):
+        store.publish(params, version=0)
+    store.publish(params, version=5)  # gaps are fine (skipped publishes)
+    assert store.version == 5
+    with pytest.raises(ValueError, match="mesh"):
+        store.publish(params, target_specs=specs)
+
+
+def test_pipeline_weight_versions_track_updates():
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4, lr=1e-3)
+    pipe = build_pipeline(
+        small_cfg(), rl, prompts_per_iter=2, seed=1,
+        async_pipeline=AsyncPipelineConfig(enabled=True, max_staleness=1),
+    )
+    hist = pipe.run(4)
+    versions = [h["async/weight_version"] for h in hist
+                if "async/weight_version" in h]
+    assert versions == [1.0, 2.0, 3.0]  # one publish per update, monotone
+    assert pipe.worker.weights.version == 3
+    # the published weights ARE the live trainer weights in this sim
+    assert pipe.worker.weights.current.params is pipe.ctx.actor_state.params
+
+
+# --------------------------------------------------------------------------- #
+# decoupled truncated-IS correction
+# --------------------------------------------------------------------------- #
+def test_truncated_is_correction_matches_hand_reference():
+    rng = np.random.default_rng(0)
+    B, T = 4, 6
+    mask = jnp.asarray(rng.integers(0, 2, (B, T)).astype(np.float32))
+    old_lp = jnp.asarray(rng.normal(-1.0, 0.5, (B, T)).astype(np.float32))
+    behavior_lp = jnp.asarray(rng.normal(-1.0, 0.5, (B, T)).astype(np.float32))
+    adv = jnp.asarray(rng.normal(0.0, 1.0, (B, T)).astype(np.float32))
+    rl = RLConfig(is_rho_max=1.5)
+    spec = dataclasses.replace(get_algorithm("grpo"), name="grpo_tis_ref",
+                               is_correction="truncated")
+    batch = {"old_logprob": old_lp, "behavior_logprob": behavior_lp,
+             "advantages": adv, "response_mask": mask}
+    out, metrics = trainer.apply_is_correction(rl, spec, batch)
+
+    # hand-computed reference: rho = min(exp(old - behaviour), rho_max),
+    # masked, scaling the advantages
+    rho_np = np.minimum(np.exp(np.asarray(old_lp) - np.asarray(behavior_lp)),
+                        1.5)
+    np.testing.assert_allclose(
+        np.asarray(out["advantages"]),
+        np.asarray(adv) * rho_np * np.asarray(mask), rtol=1e-6)
+    m = np.asarray(mask)
+    np.testing.assert_allclose(
+        float(metrics["rho_mean"]), (rho_np * m).sum() / m.sum(), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(metrics["rho_clipfrac"]),
+        ((np.exp(np.asarray(old_lp) - np.asarray(behavior_lp)) > 1.5) * m
+         ).sum() / m.sum(), rtol=1e-6)
+
+    # on-policy batches (no behavior_logprob) and "none" specs pass through
+    plain = {"old_logprob": old_lp, "advantages": adv, "response_mask": mask}
+    assert trainer.apply_is_correction(rl, spec, plain)[0] is plain
+    none_spec = get_algorithm("grpo")
+    assert trainer.apply_is_correction(rl, none_spec, batch)[0] is batch
+
+
+def test_truncated_is_weights_helper_bounds():
+    mask = jnp.ones((2, 3))
+    prox = jnp.zeros((2, 3))
+    behav = jnp.asarray([[0.0, -10.0, 10.0]] * 2)  # rho = 1, e^10 (clipped), e^-10
+    w = losses.truncated_is_weights(prox, behav, mask, rho_max=2.0)
+    rho = np.asarray(w["rho"])
+    assert rho.max() <= 2.0 and rho.min() >= 0.0
+    np.testing.assert_allclose(rho[0], [1.0, 2.0, np.exp(-10.0)], rtol=1e-5)
+
+
+def test_truncated_is_pipeline_applies_only_when_stale():
+    rl = RLConfig(algorithm="grpo", group_size=4, max_new_tokens=6, lr=1e-3)
+    spec = dataclasses.replace(get_algorithm("grpo"), name="grpo_tis_e2e",
+                               is_correction="truncated")
+    pipe = build_pipeline(
+        small_cfg(), rl, prompts_per_iter=4, seed=0, algorithm=spec,
+        async_pipeline=AsyncPipelineConfig(enabled=True, max_staleness=1),
+    )
+    h = pipe.run(4)
+    # tick 1 consumes the warmup batch at staleness 0: no correction
+    assert h[1]["async/staleness"] == 0.0
+    assert h[1]["async/is_corrected"] == 0.0
+    assert "actor/rho_mean" not in h[1]
+    # steady state: stale batches are corrected, rho stats surface
+    assert h[2]["async/is_corrected"] == 1.0
+    assert h[3]["async/is_corrected"] == 1.0
+    assert 0.0 < h[2]["actor/rho_mean"] <= rl.is_rho_max
+    assert np.isfinite(h[3]["actor/loss"])
+
+
+# --------------------------------------------------------------------------- #
+# scheduler behaviour / integration
+# --------------------------------------------------------------------------- #
+def test_one_step_overlap_and_warmup_metrics():
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4, lr=1e-3)
+    coord = DataCoordinatorConfig(double_buffer=True, prefetch=1)
+    pipe = build_pipeline(
+        small_cfg(), rl, prompts_per_iter=4, seed=4, coordinator=coord,
+        async_pipeline=AsyncPipelineConfig(enabled=True, max_staleness=1),
+    )
+    hist = pipe.run(4)
+    assert "actor/loss" not in hist[0]  # generation-only warmup
+    assert hist[0]["async/overlap_ratio"] == 0.0
+    assert "actor/loss" in hist[1]
+    for h in hist[2:]:
+        assert h["async/staleness"] == 1.0
+        assert h["async/overlap_s"] > 0.0
+        assert 0.0 < h["async/overlap_ratio"] < 0.5  # min/(gen+train) < 1/2
+    # the double buffer rotated once per tick alongside the scheduler
+    assert pipe.buffer.stats.rotations == 4
+
+
+def test_legacy_pipelined_worker_is_staleness1_scheduler():
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4, lr=1e-3)
+    pipe = build_pipeline(small_cfg(), rl, prompts_per_iter=2, seed=7)
+    pipe.worker = PipelinedDAGWorker(pipe.ctx, pipe.plan,
+                                     pipe.worker.registry, pipe.buffer)
+    assert isinstance(pipe.worker, AsyncDAGWorker)
+    assert pipe.worker.max_staleness == 1
+    hist = pipe.run(3)
+    assert "actor/loss" not in hist[0] and "actor/loss" in hist[1]
+    assert hist[2]["pipeline/staleness"] == 1.0  # back-compat metric
+
+
+def test_decoupled_driving_never_leaks_behavior_logprob():
+    """Regression: under the decoupled dispatch/consume API (no per-tick
+    buffer.clear), a corrected consume must not leave behavior_logprob in
+    the buffer where the next dispatch's pop would pack it into an
+    unrelated batch — an on-policy batch would then be IS-weighted against
+    the wrong behaviour policy."""
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4, lr=1e-3)
+    spec = dataclasses.replace(get_algorithm("grpo"), name="grpo_tis_leak",
+                               is_correction="truncated")
+    w = build_pipeline(
+        small_cfg(), rl, prompts_per_iter=2, seed=11, algorithm=spec,
+        async_pipeline=AsyncPipelineConfig(enabled=True, max_staleness=1),
+    ).worker
+    assert w.dispatch_generation({}) is not None
+    assert w.dispatch_generation({}) is not None
+    assert w.consume_and_train({}) is not None  # staleness 0
+    m = {}
+    assert w.consume_and_train(m) is not None   # staleness 1: corrected
+    assert m["async/is_corrected"] == 1.0
+    assert "behavior_logprob" not in w.buffer.keys()
+    fresh = w.dispatch_generation({})
+    assert fresh is not None
+    assert "behavior_logprob" not in fresh.data
+
+
+def test_async_rejects_post_train_nodes():
+    """The gen/train split only preserves order when MODEL_TRAIN closes the
+    chain; a DAG with a post-update node must fail fast, not silently
+    reorder."""
+    from repro.core import DAG, Node, NodeType, Role
+
+    dag = DAG.from_nodes([
+        Node("actor_generation", Role.ACTOR, NodeType.GENERATE),
+        Node("reward_compute", Role.REWARD, NodeType.COMPUTE,
+             deps=("actor_generation",)),
+        Node("advantage_compute", Role.ADVANTAGE, NodeType.COMPUTE,
+             deps=("reward_compute",)),
+        Node("actor_train", Role.ACTOR, NodeType.MODEL_TRAIN,
+             deps=("advantage_compute",)),
+        Node("post_update_logprobs", Role.ACTOR, NodeType.MODEL_INFERENCE,
+             deps=("actor_train",)),
+    ])
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4)
+    with pytest.raises(ValueError, match="post_update_logprobs"):
+        build_pipeline(
+            small_cfg(), rl, prompts_per_iter=2, dag=dag,
+            async_pipeline=AsyncPipelineConfig(enabled=True, max_staleness=1),
+        )
+    # the same DAG still compiles on the synchronous worker
+    build_pipeline(small_cfg(), rl, prompts_per_iter=2, dag=dag)
+
+
+def test_resume_replaces_behavior_policy_before_first_publish():
+    """Checkpoint-resume pattern (launch/train.py, elastic_restart):
+    ctx.actor_state is replaced AFTER build_pipeline. The first dispatch
+    must generate under the restored weights, not the discarded init
+    snapshot."""
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4, lr=1e-3)
+    pipe = build_pipeline(
+        small_cfg(), rl, prompts_per_iter=2, seed=9,
+        async_pipeline=AsyncPipelineConfig(enabled=True, max_staleness=1),
+    )
+    restored = pipe.ctx.actor_state._replace(
+        params=jax.tree.map(jnp.copy, pipe.ctx.actor_state.params))
+    pipe.ctx.actor_state = restored
+    assert pipe.worker.dispatch_generation({}) is not None
+    assert pipe.worker.weights.version == 0
+    assert pipe.worker.weights.current.params is restored.params
+
+
+def test_train_cli_max_staleness_overrides_experiment_file(tmp_path):
+    import types
+
+    from repro.launch import train as train_mod
+
+    exp = ExperimentSpec(
+        model=small_cfg(),
+        rl=RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4),
+    )
+    path = tmp_path / "exp.json"
+    path.write_text(exp.to_json())
+    args = types.SimpleNamespace(experiment=str(path), max_staleness=1)
+    loaded = train_mod.build_experiment(args)
+    assert loaded.async_pipeline == AsyncPipelineConfig(enabled=True,
+                                                        max_staleness=1)
+    # without the flag, the file's (disabled) setting stands
+    args = types.SimpleNamespace(experiment=str(path), max_staleness=None)
+    assert train_mod.build_experiment(args).async_pipeline == \
+        AsyncPipelineConfig()
+
+
+def test_experiment_spec_round_trips_async_config():
+    exp = ExperimentSpec(
+        model=small_cfg(),
+        rl=RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4),
+        async_pipeline=AsyncPipelineConfig(enabled=True, max_staleness=2),
+        prompts_per_iter=2,
+    )
+    exp2 = ExperimentSpec.from_json(exp.to_json())
+    assert exp2 == exp
+    assert exp2.async_pipeline.max_staleness == 2
+    pipe = exp2.compile()
+    assert isinstance(pipe.worker, AsyncDAGWorker)
+    assert pipe.worker.max_staleness == 2
+    # legacy specs without the key deserialize to the disabled default
+    d = exp.to_dict()
+    del d["async_pipeline"]
+    assert ExperimentSpec.from_dict(d).async_pipeline == AsyncPipelineConfig()

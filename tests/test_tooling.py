@@ -1,0 +1,88 @@
+"""CI tooling tests: scripts/ci.sh must propagate chunk failures and print
+per-chunk timing; scripts/check_docs.py must execute doc fences and catch
+API drift."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_ci(chunks: str):
+    env = dict(os.environ, CI_CHUNKS=chunks)
+    env.pop("PYTHONPATH", None)  # ci.sh must set it itself
+    return subprocess.run(
+        ["bash", str(REPO / "scripts" / "ci.sh")],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+
+
+def test_ci_sh_propagates_chunk_failure(tmp_path):
+    """Acceptance: a failing parallel chunk fails the whole run (verified
+    with an intentionally failing chunk) and timings are printed."""
+    good = tmp_path / "test_good.py"
+    good.write_text("def test_ok():\n    assert True\n")
+    bad = tmp_path / "test_bad.py"
+    bad.write_text("def test_nope():\n    assert False\n")
+    res = _run_ci(f"{good};{bad}")
+    assert res.returncode != 0, res.stdout + res.stderr
+    assert "chunk2 FAILED" in res.stdout
+    assert "chunk1 ok in " in res.stdout  # per-chunk timing is visible
+    assert "s:" in res.stdout
+
+
+def test_ci_sh_green_run_exits_zero(tmp_path):
+    good = tmp_path / "test_good.py"
+    good.write_text("def test_ok():\n    assert True\n")
+    res = _run_ci(str(good))
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "chunk1 ok in " in res.stdout
+
+
+def _run_check_docs(*paths):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_docs.py"),
+         *map(str, paths)],
+        capture_output=True, text=True, cwd=REPO,
+    )
+
+
+def test_check_docs_runs_good_fences_cumulatively(tmp_path):
+    md = tmp_path / "good.md"
+    md.write_text(textwrap.dedent("""\
+        # sample
+        ```python
+        from repro.configs import AsyncPipelineConfig
+        cfg = AsyncPipelineConfig(enabled=True, max_staleness=1)
+        ```
+        Later fences share the namespace:
+        ```python
+        assert cfg.max_staleness == 1
+        ```
+        Non-python fences are ignored:
+        ```json
+        {"not": "executed"}
+        ```
+        ```python no-check
+        this_would_raise(
+        ```
+        """))
+    res = _run_check_docs(md)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "all python fences pass" in res.stdout
+
+
+def test_check_docs_catches_api_drift(tmp_path):
+    md = tmp_path / "drift.md"
+    md.write_text(textwrap.dedent("""\
+        ```python
+        from repro.configs import AsyncPipelineConfig
+        AsyncPipelineConfig(max_staleness_typo=1)
+        ```
+        """))
+    res = _run_check_docs(md)
+    assert res.returncode != 0
+    assert "FAIL" in res.stdout
+    assert "drift.md:1" in res.stdout  # failure names file and fence line
