@@ -57,10 +57,37 @@ def roofline_table() -> str:
     return "\n".join(out)
 
 
+def rollout_table() -> str:
+    """Render the committed rollout-engine baseline (BENCH_rollout.json):
+    lockstep vs continuous-batching tokens/sec, padding waste, occupancy."""
+    path = os.path.join(RESULTS, "BENCH_rollout.json")
+    if not os.path.exists(path):
+        return ""
+    r = json.load(open(path))
+    wl, lk, en = r["workload"], r["lockstep"], r["engine"]
+    out = [
+        f"## Rollout engine (batch {wl['batch']}, max_new {wl['max_new']}, "
+        f"{wl['num_slots']} slots, mean len {wl['mean_len']:.1f})\n",
+        "| arm | s/iter | tokens/s | padding waste | slot occupancy |",
+        "|---|---|---|---|---|",
+        f"| lockstep | {lk['s_per_iter']:.4f} | {lk['tokens_per_s']:.0f} "
+        f"| {lk['padding_waste'] * 100:.1f}% | - |",
+        f"| continuous | {en['s_per_iter']:.4f} | {en['tokens_per_s']:.0f} "
+        f"| {en['padding_waste'] * 100:.1f}% "
+        f"| {en['slot_occupancy'] * 100:.1f}% |",
+        f"\n**{r['speedup']:.2f}x tokens/sec over lockstep** on the skewed "
+        f"workload ({wl['budget_mix']}).",
+    ]
+    return "\n".join(out)
+
+
 def main() -> None:
     import sys
 
     suffix = "_opt" if "--opt" in sys.argv else ""
+    rt = rollout_table()
+    if rt:
+        print(rt + "\n")
     print(f"## Dry-run{suffix} (single-pod 16x16 = 256 chips, "
           "multi-pod 2x16x16 = 512)\n")
     rows = json.load(open(os.path.join(RESULTS, f"dryrun_compile{suffix}.json")))

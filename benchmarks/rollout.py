@@ -1,0 +1,182 @@
+"""Rollout-engine arm: lockstep vs continuous-batching generation on a
+skewed response-length workload.
+
+The workload fixes per-sequence response budgets drawn from a skewed mixture
+(70% short, 20% medium, 10% at the full ``max_new`` budget — the shape of
+mixed short-answer / long-CoT RL batches). Both arms run the SAME model,
+prompts, and budgets, so they produce the same token counts; the tiny random
+model's next-token distribution is near-uniform, so EOS is left to the
+budgets rather than to a token the model would essentially never sample.
+Lockstep must still scan all ``max_new - 1`` decode steps at full batch
+width; the continuous engine frees each slot at its budget and refills it
+from the queue.
+
+Reported per arm (CSV rows via benchmarks.common.emit, and the committed
+``results/BENCH_rollout.json`` baseline via ``--json``):
+
+  * tokens/sec        — counted response tokens / measured wall-clock
+  * padding-waste %   — fraction of decode lane-steps that produced no
+                        counted token (lockstep: B x (max_new-1) lane-steps;
+                        engine: num_slots x executed decode steps)
+  * slot occupancy    — engine only: active-slot-steps / lane-steps
+  * speedup           — engine tokens/sec over lockstep tokens/sec
+                        (acceptance floor: >= 1.5x on this workload)
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+from typing import Dict
+
+# allow `python benchmarks/rollout.py` from the repo root (same dance as
+# benchmarks/run.py): make the `benchmarks` package importable
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, tiny_cfg
+from repro.models import get_model
+from repro.rl.rollout import generate
+from repro.rl.rollout_engine import ContinuousRolloutEngine, lockstep_waste
+
+B = 64  # sequences per iteration
+LP = 6  # prompt length
+MAX_NEW = 64  # response budget (lockstep always scans all of it)
+SLOTS = 16  # engine decode-slot pool
+REFILL_THRESHOLD = 2  # coalesce refills: dispatch overhead rivals a step on CPU
+
+
+def skewed_budgets(seed: int = 0) -> np.ndarray:
+    """Per-sequence response caps: 70% short (4-8), 20% medium (12-20),
+    10% the full budget."""
+    rng = np.random.default_rng(seed)
+    out = np.empty(B, np.int32)
+    for i in range(B):
+        u = rng.random()
+        if u < 0.7:
+            out[i] = rng.integers(4, 9)
+        elif u < 0.9:
+            out[i] = rng.integers(12, 21)
+        else:
+            out[i] = MAX_NEW
+    return out
+
+
+def _length_stats(lengths: np.ndarray) -> Dict[str, float]:
+    return {
+        "mean_len": float(lengths.mean()),
+        "p50_len": float(np.percentile(lengths, 50)),
+        "p90_len": float(np.percentile(lengths, 90)),
+        "max_len": float(lengths.max()),
+    }
+
+
+def run(iters: int = 3, seed: int = 0) -> Dict:
+    cfg = tiny_cfg()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (B, LP), 3, 200)
+    budgets = skewed_budgets(seed)
+
+    gen_kw = dict(max_new=MAX_NEW, temperature=1.0, pad_id=0)
+    lock = jax.jit(functools.partial(generate, model, **gen_kw))
+    keys = [jax.random.fold_in(jax.random.PRNGKey(seed + 3), i)
+            for i in range(iters + 1)]
+    bud_dev = jax.numpy.asarray(budgets)
+
+    # ---- lockstep arm ---------------------------------------------------- #
+    jax.block_until_ready(
+        lock(params, prompts, keys[-1], budgets=bud_dev).tokens)  # warmup
+    lock_tokens, lock_lens = 0, []
+    t0 = time.perf_counter()
+    for i in range(iters):
+        res = lock(params, prompts, keys[i], budgets=bud_dev)
+        jax.block_until_ready(res.tokens)
+        lens = np.asarray(res.lengths)
+        lock_lens.append(lens)
+        lock_tokens += int(lens.sum())
+    lock_dt = time.perf_counter() - t0
+    lock_lens = np.concatenate(lock_lens)
+
+    # ---- continuous engine arm ------------------------------------------ #
+    eng = ContinuousRolloutEngine(
+        model, num_slots=SLOTS, refill_threshold=REFILL_THRESHOLD, **gen_kw)
+    eng(params, prompts, keys[-1], budgets=budgets)  # warmup (compiles)
+    eng_tokens, eng_lens = 0, []
+    occ, waste, steps = [], [], 0
+    t0 = time.perf_counter()
+    for i in range(iters):
+        res = eng(params, prompts, keys[i], budgets=budgets)
+        lens = np.asarray(res.lengths)
+        eng_lens.append(lens)
+        eng_tokens += int(lens.sum())
+        occ.append(eng.last_stats["slot_occupancy"])
+        waste.append(eng.last_stats["padding_waste"])
+        steps += eng.last_stats["decode_steps"]
+    eng_dt = time.perf_counter() - t0
+    eng_lens = np.concatenate(eng_lens)
+
+    lock_tps = lock_tokens / lock_dt
+    eng_tps = eng_tokens / eng_dt
+    return {
+        "workload": {
+            "batch": B, "prompt_len": LP, "max_new": MAX_NEW,
+            "num_slots": SLOTS, "iters": iters,
+            "refill_threshold": REFILL_THRESHOLD,
+            "budget_mix": "70% 4-8 | 20% 12-20 | 10% 64",
+            **_length_stats(budgets),
+        },
+        "lockstep": {
+            "s_per_iter": lock_dt / iters,
+            "tokens_per_s": lock_tps,
+            "padding_waste": lockstep_waste(lock_lens, MAX_NEW),
+            "decode_steps_per_iter": float(MAX_NEW - 1),
+            **_length_stats(lock_lens),
+        },
+        "engine": {
+            "s_per_iter": eng_dt / iters,
+            "tokens_per_s": eng_tps,
+            "padding_waste": float(np.mean(waste)),
+            "slot_occupancy": float(np.mean(occ)),
+            "decode_steps_per_iter": steps / iters,
+            **_length_stats(eng_lens),
+        },
+        "speedup": eng_tps / lock_tps,
+    }
+
+
+def main() -> None:
+    r = run()
+    wl, lk, en = r["workload"], r["lockstep"], r["engine"]
+    emit("rollout/lockstep_s_per_iter", lk["s_per_iter"] * 1e6,
+         f"tokens_per_s={lk['tokens_per_s']:.0f} "
+         f"padding_waste_pct={lk['padding_waste'] * 100:.1f}")
+    emit("rollout/engine_s_per_iter", en["s_per_iter"] * 1e6,
+         f"tokens_per_s={en['tokens_per_s']:.0f} "
+         f"padding_waste_pct={en['padding_waste'] * 100:.1f} "
+         f"slot_occupancy_pct={en['slot_occupancy'] * 100:.1f}")
+    emit("rollout/speedup_pct", (r["speedup"] - 1.0) * 100.0,
+         f"slots={wl['num_slots']} batch={wl['batch']} "
+         f"mean_len={wl['mean_len']:.1f} max_new={wl['max_new']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the BENCH_rollout.json baseline here")
+    args = ap.parse_args()
+    result = run(iters=args.iters, seed=args.seed)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.json}")
+    print(json.dumps(result, indent=2))

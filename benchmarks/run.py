@@ -17,6 +17,7 @@ def main() -> None:
         algorithms,
         async_pipeline,
         coordinator,
+        rollout,
         fig09_ppo_throughput,
         fig10_grpo_throughput,
         fig11_scalability,
@@ -36,6 +37,7 @@ def main() -> None:
         ("fig14", fig14_convergence.main),
         ("coordinator", coordinator.main),
         ("async_pipeline", async_pipeline.main),
+        ("rollout", rollout.main),
         ("algorithms", algorithms.main),
         ("roofline", roofline.main),
     ]

@@ -29,7 +29,7 @@ import pathlib
 import sys
 import time
 import traceback
-from typing import List, Tuple
+from typing import List, Tuple  # noqa: F401 (Tuple used in TIMINGS annot)
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 
@@ -53,6 +53,9 @@ def extract_fences(text: str) -> List[Tuple[int, str, str]]:
     return fences
 
 
+TIMINGS: List[Tuple[float, str]] = []  # (seconds, "file:line") per fence
+
+
 def check_file(path: pathlib.Path) -> List[str]:
     """Run the file's python fences in one shared namespace; return errors."""
     errors = []
@@ -70,12 +73,25 @@ def check_file(path: pathlib.Path) -> List[str]:
                 f"{path}:{lineno}: fence failed\n{traceback.format_exc()}"
             )
             status = "FAIL"
-        print(
-            f"[check_docs] {path.relative_to(REPO) if path.is_relative_to(REPO) else path}"
-            f":{lineno} {status} ({time.perf_counter() - t0:.1f}s)",
-            flush=True,
-        )
+        elapsed = time.perf_counter() - t0
+        rel = path.relative_to(REPO) if path.is_relative_to(REPO) else path
+        TIMINGS.append((elapsed, f"{rel}:{lineno}"))
+        print(f"[check_docs] {rel}:{lineno} {status} ({elapsed:.1f}s)",
+              flush=True)
     return errors
+
+
+def print_slowest(n: int = 5) -> None:
+    """Per-fence execution-time summary: the slowest fences are where the
+    docs chunk's CI wall time hides — surface them so a doc edit that drags
+    in a heavyweight example is visible before it drifts toward the cap."""
+    if not TIMINGS:
+        return
+    total = sum(t for t, _ in TIMINGS)
+    top = sorted(TIMINGS, reverse=True)[:n]
+    print(f"[check_docs] {len(TIMINGS)} fences in {total:.1f}s; slowest:")
+    for elapsed, where in top:
+        print(f"[check_docs]   {elapsed:6.1f}s  {where}")
 
 
 def main(argv=None) -> int:
@@ -90,6 +106,7 @@ def main(argv=None) -> int:
     all_errors = []
     for path in paths:
         all_errors.extend(check_file(path))
+    print_slowest()
     if all_errors:
         print("\n".join(all_errors), file=sys.stderr)
         print(f"[check_docs] {len(all_errors)} fence(s) FAILED", flush=True)

@@ -30,6 +30,7 @@ from repro.configs.base import (
     AsyncPipelineConfig,
     DataCoordinatorConfig,
     ModelConfig,
+    RolloutEngineConfig,
 )
 from repro.rl.trainer import RLConfig
 
@@ -52,6 +53,9 @@ class ExperimentSpec:
     )
     async_pipeline: AsyncPipelineConfig = dataclasses.field(
         default_factory=AsyncPipelineConfig
+    )
+    rollout: RolloutEngineConfig = dataclasses.field(
+        default_factory=RolloutEngineConfig
     )
     mesh_shape: Optional[Tuple[int, ...]] = None
     mesh_axes: Tuple[str, ...] = ("data", "model")
@@ -77,6 +81,7 @@ class ExperimentSpec:
             "rl": dataclasses.asdict(self.rl),
             "coordinator": dataclasses.asdict(self.coordinator),
             "async_pipeline": dataclasses.asdict(self.async_pipeline),
+            "rollout": dataclasses.asdict(self.rollout),
             "mesh_shape": list(self.mesh_shape) if self.mesh_shape else None,
             "mesh_axes": list(self.mesh_axes),
             "prompts_per_iter": self.prompts_per_iter,
@@ -93,6 +98,7 @@ class ExperimentSpec:
             rl=RLConfig(**d.get("rl", {})),
             coordinator=DataCoordinatorConfig(**d.get("coordinator", {})),
             async_pipeline=AsyncPipelineConfig(**d.get("async_pipeline", {})),
+            rollout=RolloutEngineConfig(**d.get("rollout", {})),
             mesh_shape=tuple(mesh_shape) if mesh_shape else None,
             mesh_axes=tuple(d.get("mesh_axes", ("data", "model"))),
             prompts_per_iter=d.get("prompts_per_iter", 8),
@@ -137,6 +143,7 @@ class ExperimentSpec:
             centralized=self.centralized,
             coordinator=self.coordinator,
             async_pipeline=self.async_pipeline,
+            rollout=self.rollout,
             registry=registry,
             algorithm=self.algorithm,
             seed=self.seed,

@@ -2,6 +2,7 @@ from repro.configs.base import (
     AsyncPipelineConfig,
     DataCoordinatorConfig,
     ModelConfig,
+    RolloutEngineConfig,
     ShapeConfig,
     ALL_SHAPES,
     SHAPES_BY_NAME,

@@ -227,6 +227,60 @@ class DataCoordinatorConfig:
 
 
 # --------------------------------------------------------------------------- #
+# Continuous-batching rollout engine (beyond-paper: vLLM/AsyncFlow-style
+# in-flight batching for the GENERATE stage).
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class RolloutEngineConfig:
+    """Flags for the GENERATE-stage generation engine
+    (``rl/rollout_engine.ContinuousRolloutEngine``).
+
+    ``engine="lockstep"`` (default) keeps the original ``rl.rollout.generate``
+    path: every prompt padded to a common length, all ``max_new`` decode steps
+    scanned even after every sequence emitted EOS. ``engine="continuous"``
+    runs a fixed pool of ``num_slots`` decode slots over one persistent
+    KV-cache arena: a slot whose sequence hits EOS is immediately refilled
+    with the next queued prompt, and the decode loop early-exits (a
+    ``lax.while_loop`` on ``all(done)``) once the prompt queue drains. Under
+    a fixed slot schedule (``num_slots`` >= batch, one length bucket) the
+    continuous engine is token-for-token identical to lockstep — asserted by
+    the test suite. See ``docs/rollout_engine.md``.
+    """
+
+    engine: str = "lockstep"  # "lockstep" | "continuous"
+    # decode-slot pool size; 0 = one slot per sequence in the batch (no
+    # queueing — early-exit is then the only win). Values < batch enable
+    # slot refill: the queue's remaining prompts backfill freed slots.
+    num_slots: int = 0
+    # chunked prefill: split each refill prompt into chunks of this many
+    # tokens so one long prefill is broken into bounded pieces (0 = whole
+    # prompt in one pass). Attention-only archs without KV rings.
+    prefill_chunk: int = 0
+    # length bucketing: round each prompt's true (non-pad) length up to a
+    # multiple of this and prefill at the bucket length instead of the
+    # batch's padded max (0 = single bucket at the padded length, which is
+    # the lockstep-equivalent schedule).
+    prefill_bucket: int = 0
+    # minimum newly-freed slots before the decode loop hands control back
+    # for a refill while prompts pend. 1 = refill eagerly (max occupancy);
+    # 2-4 coalesces refill batches when dispatch overhead rivals a decode
+    # step (CPU hosts).
+    refill_threshold: int = 1
+
+    def __post_init__(self):
+        if self.engine not in ("lockstep", "continuous"):
+            raise ValueError(
+                f"engine must be 'lockstep' or 'continuous', got {self.engine!r}"
+            )
+        for name in ("num_slots", "prefill_chunk", "prefill_bucket"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0, got {getattr(self, name)}")
+        if self.refill_threshold < 1:
+            raise ValueError(
+                f"refill_threshold must be >= 1, got {self.refill_threshold}")
+
+
+# --------------------------------------------------------------------------- #
 # Async off-policy pipeline v2 (beyond-paper: AsyncFlow / LlamaRL-style
 # staleness-bounded generation/training overlap on the DistFlow DAG).
 # --------------------------------------------------------------------------- #

@@ -175,6 +175,14 @@ class AsyncDAGWorker(DAGWorker):
                 self.execute_node(node, fn, metrics)
         finally:
             self.ctx.actor_state = live
+        # continuous rollout engine (rl/rollout_engine): its measured
+        # generation throughput is the async arm's gen-side capacity — what
+        # the staleness window is buying overlap against
+        stats = getattr(self.ctx.engines.get("generate"), "last_stats", None)
+        if stats:
+            metrics["async/gen_tokens_per_s"] = stats.get("tokens_per_s", 0.0)
+            metrics["async/gen_slot_occupancy"] = stats.get(
+                "slot_occupancy", 1.0)
         data = {k: self.buffer.pop(k) for k in list(self.buffer.keys())}
         pending = PendingRollout(
             data=data,

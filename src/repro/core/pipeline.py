@@ -27,6 +27,7 @@ from repro.configs.base import (
     AsyncPipelineConfig,
     DataCoordinatorConfig,
     ModelConfig,
+    RolloutEngineConfig,
 )
 from repro.core.dag import DAG
 from repro.core.databuffer import (
@@ -66,9 +67,13 @@ def ppo_dag() -> DAG:
 
 # --------------------------------------------------------------------------- #
 def _build_engines(model, cfg: ModelConfig, rl: RLConfig, tok: ByteTokenizer,
-                   spec):
+                   spec, rollout: Optional[RolloutEngineConfig] = None):
     """Jitted engines for one algorithm spec. The advantage engine comes from
-    ``spec.make_advantage``; critic engines exist iff the spec uses a critic."""
+    ``spec.make_advantage``; critic engines exist iff the spec uses a critic.
+    The GENERATE engine is either the jitted lockstep ``rollout.generate`` or
+    the slot-refill :class:`~repro.rl.rollout_engine.ContinuousRolloutEngine`
+    (``RolloutEngineConfig.engine == "continuous"``) — same call contract,
+    same RolloutResult."""
     eng: Dict[str, Any] = {}
 
     def _generate(params, prompts, key):
@@ -78,7 +83,22 @@ def _build_engines(model, cfg: ModelConfig, rl: RLConfig, tok: ByteTokenizer,
             eos_id=tok.eos_id, pad_id=tok.pad_id,
         )
 
-    eng["generate"] = jax.jit(_generate)
+    if rollout is not None and rollout.engine == "continuous":
+        from repro.rl.rollout_engine import ContinuousRolloutEngine
+
+        eng["generate"] = ContinuousRolloutEngine(
+            model,
+            max_new=rl.max_new_tokens,
+            temperature=rl.temperature,
+            eos_id=tok.eos_id,
+            pad_id=tok.pad_id,
+            num_slots=rollout.num_slots,
+            prefill_chunk=rollout.prefill_chunk,
+            prefill_bucket=rollout.prefill_bucket,
+            refill_threshold=rollout.refill_threshold,
+        )
+    else:
+        eng["generate"] = jax.jit(_generate)
     eng["logprobs"] = jax.jit(lambda p, t: model.logprobs(p, t))
     eng["reward"] = jax.jit(
         lambda tokens, mask, answers: reward_mod.math_reward_tokens(
@@ -122,6 +142,7 @@ def build_pipeline(
     centralized: bool = False,
     coordinator: Optional[DataCoordinatorConfig] = None,
     async_pipeline: Optional[AsyncPipelineConfig] = None,
+    rollout: Optional[RolloutEngineConfig] = None,
     registry: Optional[Registry] = None,
     algorithm=None,
     seed: int = 0,
@@ -146,7 +167,7 @@ def build_pipeline(
     ctx = WorkerContext(
         mesh=mesh,
         rl=rl,
-        engines=_build_engines(model, cfg, rl, tok, spec),
+        engines=_build_engines(model, cfg, rl, tok, spec, rollout),
         dataloader=DistributedDataloader(
             dataset or SyntheticMathDataset(4096, seed=seed),
             mesh=mesh,

@@ -38,27 +38,38 @@ def _specs(ctx):
 
 # --------------------------------------------------------------------------- #
 def actor_generate(ctx, buffer, node: Node) -> Dict:
-    """(ACTOR, GENERATE): pull a prompt shard from the Distributed Dataloader,
-    roll out group_size responses per prompt, store the trajectory."""
+    """(ACTOR, GENERATE): pull the iteration's prompts from the worker-bound
+    prompt iterator (``ctx.prompt_source``, already group-expanded), drive
+    the generation engine — the jitted lockstep path or the slot-refill
+    continuous-batching engine, same call contract — and store the
+    trajectory. Continuous-engine runs additionally report the engine's
+    tokens/sec, padding-waste, and slot-occupancy metrics."""
     model_spec, _ = _specs(ctx)
-    batch = ctx.dataloader.next_batch()
-    prompts, answers = batch["prompts"], batch["answers"]
-    g = _algo(ctx).group_size(ctx.rl)
-    if g > 1:
-        prompts = jnp.repeat(prompts, g, axis=0)
-        answers = jnp.repeat(answers, g, axis=0)
+    if ctx.prompt_source is None:
+        # hand-rolled ctx without a worker: bind the same iterator the
+        # worker would, so group expansion has exactly one implementation
+        from repro.core.worker import PromptSource
+
+        ctx.prompt_source = PromptSource(
+            ctx.dataloader, _algo(ctx).group_size(ctx.rl))
+    prompts, answers = ctx.prompt_source.next_prompts()
     key = ctx.next_key()
-    res = ctx.engines["generate"](ctx.actor_state.params, prompts, key)
+    engine = ctx.engines["generate"]
+    res = engine(ctx.actor_state.params, prompts, key)
     buffer.put("tokens", res.tokens, model_spec)
     buffer.put("response_mask", res.response_mask, model_spec)
     buffer.put("old_logprob", res.old_logprob, model_spec)
     buffer.put("answers", answers, model_spec)
     gen_tokens = float(jnp.sum(res.lengths))
     ctx.counters["gen_tokens"] = ctx.counters.get("gen_tokens", 0.0) + gen_tokens
-    return {
+    out = {
         "rollout/mean_len": float(jnp.mean(res.lengths.astype(jnp.float32))),
         "rollout/tokens": gen_tokens,
     }
+    stats = getattr(engine, "last_stats", None)
+    if stats:  # continuous engine: slot/throughput accounting
+        out.update({f"rollout/{k}": float(v) for k, v in stats.items()})
+    return out
 
 
 def actor_logprobs(ctx, buffer, node: Node) -> Dict:

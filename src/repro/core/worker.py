@@ -43,11 +43,37 @@ class WorkerContext:
     # the AlgorithmSpec driving this run (repro.rl.algorithms); None means
     # "resolve rl.algorithm from the registry on demand"
     algorithm: Any = None
+    # the prompt iterator the GENERATE stage pulls from (bound by the worker
+    # at init — see PromptSource); None falls back to ctx.dataloader directly
+    prompt_source: Any = None
     counters: Dict[str, float] = field(default_factory=dict)
 
     def next_key(self):
         self.key, sub = jax.random.split(self.key)
         return sub
+
+
+class PromptSource:
+    """The worker-owned prompt iterator handed to the GENERATE stage.
+
+    The continuous-batching rollout engine consumes one flat queue of
+    sequences per iteration; the worker — not the stage function — owns where
+    that queue comes from, so a custom driver (or the async scheduler) can
+    swap the source without touching the registry. Each ``next_prompts()``
+    serves the iteration's prompt batch already group-expanded (GRPO's
+    ``group_size`` rollouts per prompt)."""
+
+    def __init__(self, dataloader, group_size: int = 1):
+        self.dataloader = dataloader
+        self.group_size = group_size
+
+    def next_prompts(self):
+        batch = self.dataloader.next_batch()
+        prompts, answers = batch["prompts"], batch["answers"]
+        if self.group_size > 1:
+            prompts = jnp.repeat(prompts, self.group_size, axis=0)
+            answers = jnp.repeat(answers, self.group_size, axis=0)
+        return prompts, answers
 
 
 class DAGWorker:
@@ -69,6 +95,20 @@ class DAGWorker:
         self.queue: List[tuple] = [
             (task.node, self.registry.resolve(task.node)) for task in plan.tasks
         ]
+        # hand the GENERATE stage its prompt iterator (rollout-engine
+        # contract): bound here, once, so the group expansion is resolved
+        # from the algorithm spec instead of re-derived per stage call
+        if ctx.prompt_source is None and ctx.dataloader is not None:
+            try:
+                from repro.rl import algorithms
+
+                g = algorithms.resolve(ctx).group_size(ctx.rl)
+            except (KeyError, AttributeError):
+                # hand-rolled ctx without a resolvable algorithm (unknown
+                # registry name / no rl config): no grouping. Anything else
+                # — e.g. a custom spec whose group_size raises — stays loud.
+                g = 1
+            ctx.prompt_source = PromptSource(ctx.dataloader, g)
 
     def run_iteration(self) -> Dict[str, float]:
         """One RL iteration: execute the serialized chain; the databuffer is

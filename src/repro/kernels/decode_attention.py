@@ -96,6 +96,156 @@ def _kernel(
         lse_ref[0, :] = (m_ref[:, 0] + jnp.log(l[:, 0]))
 
 
+def _quant_kernel(
+    len_ref,  # scalar prefetch (B,) int32
+    q_ref,
+    k_ref,  # int8 tile
+    v_ref,  # int8 tile
+    ks_ref,  # f32 per-slot-per-head scales
+    vs_ref,
+    o_ref,
+    lse_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    block_s: int,
+    num_s_blocks: int,
+    pos_offset: int,
+    window: Optional[int],
+    group: int,
+):
+    """Flash-decode over an int8 KV cache: dequantization is fused into the
+    tile loop (int8 tile + f32 scales dequantized in VMEM right before the
+    logits matmul), so the full-width bf16 cache never exists in HBM — the
+    whole point of ``ModelConfig.kv_quant``. Math otherwise identical to
+    :func:`_kernel`."""
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = len_ref[b]
+    blk_lo = si * block_s + pos_offset
+    needed = blk_lo < cache_len
+    if window is not None:
+        needed &= (blk_lo + block_s) > (cache_len - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0, :, :]  # (group, D)
+        # fused per-tile dequant: (block_s, D) int8 * (block_s, 1) f32
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = s * scale  # (group, block_s)
+        kpos = blk_lo + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+        valid = kpos < cache_len
+        if window is not None:
+            valid &= kpos > (cache_len - 1) - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(si == num_s_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, :1], 1e-20)
+        o_ref[0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0, :] = (m_ref[:, 0] + jnp.log(l[:, 0]))
+
+
+def decode_attention_quant(
+    q: jax.Array,
+    k: jax.Array,  # (B, S, KVH, D) int8
+    v: jax.Array,  # (B, S, KVH, D) int8
+    k_scale: jax.Array,  # (B, S, KVH) f32
+    v_scale: jax.Array,  # (B, S, KVH) f32
+    cache_len: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    pos_offset: int = 0,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Flash-decode over a quantized cache; returns (o (B,H,D), lse (B,H)).
+
+    Equivalent to ``dequant_kv`` + :func:`decode_attention` but the cache
+    stays int8 end-to-end in HBM (the previous ``_decode_quant`` model path
+    materialized the full bf16 cache every decode step)."""
+    B, H, D = q.shape
+    _, S, KVH, _ = k.shape
+    assert H % KVH == 0
+    group = H // KVH
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    block_s = min(block_s, S)
+    assert S % block_s == 0
+    ns = S // block_s
+    qg = q.reshape(B, KVH, group, D)
+
+    kernel = functools.partial(
+        _quant_kernel,
+        scale=scale,
+        block_s=block_s,
+        num_s_blocks=ns,
+        pos_offset=pos_offset,
+        window=window,
+        group=group,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KVH, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), lambda b, kh, si, lens: (b, kh, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, D), lambda b, kh, si, lens: (b, si, kh, 0)),
+            pl.BlockSpec((1, block_s, 1, D), lambda b, kh, si, lens: (b, si, kh, 0)),
+            pl.BlockSpec((1, block_s, 1), lambda b, kh, si, lens: (b, si, kh)),
+            pl.BlockSpec((1, block_s, 1), lambda b, kh, si, lens: (b, si, kh)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, group, D), lambda b, kh, si, lens: (b * KVH + kh, 0, 0)),
+            pl.BlockSpec((1, group), lambda b, kh, si, lens: (b * KVH + kh, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, D), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+        ],
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B * KVH, group, D), q.dtype),
+            jax.ShapeDtypeStruct((B * KVH, group), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, k, v, k_scale, v_scale)
+    return o.reshape(B, H, D), lse.reshape(B, H)
+
+
 def decode_attention(
     q: jax.Array,
     k: jax.Array,

@@ -85,6 +85,27 @@ def decode_attention(
     )
 
 
+def decode_attention_quant(
+    q, k, v, k_scale, v_scale, cache_len, *, scale=None, window=None,
+    pos_offset=0
+) -> Tuple[jax.Array, jax.Array]:
+    """int8-cache flash decode; returns (o, lse) in every mode. The Pallas
+    path fuses dequantization into the tile loop; the ref path dequantizes
+    up front (bitwise-identical to the pre-fusion ``_decode_quant``)."""
+    mode = current_mode()
+    if mode == "ref":
+        return _ref.decode_attention_quant(
+            q, k, v, k_scale, v_scale, cache_len,
+            scale=scale, window=window, pos_offset=pos_offset,
+            return_lse=True,
+        )
+    return _da.decode_attention_quant(
+        q, k, v, k_scale, v_scale, cache_len,
+        scale=scale, window=window, pos_offset=pos_offset,
+        interpret=(mode == "interpret"),
+    )
+
+
 def combine_decode_shards(o_parts, lse_parts):
     return _ref.combine_decode_shards(o_parts, lse_parts)
 

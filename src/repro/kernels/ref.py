@@ -136,6 +136,32 @@ def decode_attention(
     return o.astype(q.dtype)
 
 
+def decode_attention_quant(
+    q: jax.Array,
+    k: jax.Array,  # (B, S, KVH, D) int8
+    v: jax.Array,
+    k_scale: jax.Array,  # (B, S, KVH) f32 per-slot-per-head scales
+    v_scale: jax.Array,
+    cache_len: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    return_lse: bool = False,
+    pos_offset: int = 0,
+):
+    """Oracle for the fused int8-cache decode kernel: dequantize the whole
+    cache to bf16 (the pre-fusion model path, bitwise-preserved) and run the
+    standard decode oracle. The Pallas kernel dequantizes per tile in VMEM
+    instead — correctness-equivalent, but never materializes the bf16 cache."""
+    kd = (k.astype(jnp.float32) * k_scale[..., None]).astype(jnp.bfloat16)
+    vd = (v.astype(jnp.float32) * v_scale[..., None]).astype(jnp.bfloat16)
+    return decode_attention(
+        q, kd, vd, cache_len,
+        scale=scale, window=window, return_lse=return_lse,
+        pos_offset=pos_offset,
+    )
+
+
 def combine_decode_shards(o_parts: jax.Array, lse_parts: jax.Array) -> jax.Array:
     """Exactly combine per-shard (o, lse) from a sequence-sharded cache.
 

@@ -24,7 +24,12 @@ import json
 import time
 
 from repro.api import ExperimentSpec
-from repro.configs import AsyncPipelineConfig, get_config, reduced
+from repro.configs import (
+    AsyncPipelineConfig,
+    RolloutEngineConfig,
+    get_config,
+    reduced,
+)
 from repro.distributed import sharding as shr
 from repro.ft import checkpoint
 from repro.launch.mesh import make_local_mesh
@@ -67,10 +72,16 @@ def build_experiment(args) -> ExperimentSpec:
         async_pipeline = AsyncPipelineConfig(
             enabled=True, max_staleness=args.max_staleness
         )
+    rollout = RolloutEngineConfig()
+    if args.rollout_slots is not None:
+        rollout = RolloutEngineConfig(
+            engine="continuous", num_slots=args.rollout_slots
+        )
     return ExperimentSpec(
         model=cfg,
         rl=rl,
         async_pipeline=async_pipeline,
+        rollout=rollout,
         prompts_per_iter=args.prompts_per_iter,
         centralized=args.centralized_baseline,
         seed=args.seed,
@@ -96,6 +107,10 @@ def main(argv=None) -> None:
                     help="enable the async off-policy pipeline with this "
                          "staleness bound (0 = lockstep scheduler, bitwise-"
                          "identical to sync; see docs/async_pipeline.md)")
+    ap.add_argument("--rollout-slots", type=int, default=None,
+                    help="enable the continuous-batching rollout engine "
+                         "with this many decode slots (0 = one per "
+                         "sequence; see docs/rollout_engine.md)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced model config (CPU-sized)")
     ap.add_argument("--seed", type=int, default=0)

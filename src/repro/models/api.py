@@ -59,6 +59,26 @@ class Model:
         return lm.decode_step(self.cfg, params, token, caches, cache_len,
                               unroll=unroll)
 
+    # ---- continuous-batching rollout engine hooks (LM only) ----
+    def prefill_chunk(self, params, tokens, caches, *, offset: int,
+                      unroll: bool = False):
+        """One chunk of a chunked prefill into existing caches (see
+        ``lm.prefill_chunk``)."""
+        if self.is_encdec:
+            raise NotImplementedError(
+                "chunked prefill is decoder-only; enc-dec prefill runs the "
+                "encoder over the whole input"
+            )
+        return lm.prefill_chunk(self.cfg, params, tokens, caches,
+                                offset=offset, unroll=unroll)
+
+    def gather_cache_rows(self, caches, slots):
+        return lm.gather_cache_rows(caches, slots)
+
+    def scatter_cache_rows(self, caches, rows, slots):
+        """Slot-reset: overwrite arena rows at ``slots`` with fresh rows."""
+        return lm.scatter_cache_rows(caches, rows, slots)
+
 
 def get_model(cfg: ModelConfig) -> Model:
     return Model(cfg)

@@ -126,9 +126,49 @@ def _attn_mixer(
     cache: Optional[Params],
     cache_len: Optional[jax.Array],
     smax: int,
+    chunk_offset: Optional[int] = None,
 ):
     if mode == "full":
         return layers.self_attention(cfg, p, h, positions), None
+
+    if mode == "prefill_chunk":
+        # one chunk of a chunked prefill: write this chunk's K/V into the
+        # existing cache at [offset, offset+C) and attend the chunk's queries
+        # against the (static-width) prefix [0, offset+C). ``chunk_offset``
+        # is a Python int, so every slice below is static. Ring (SWA-bounded)
+        # caches are unsupported — the engine falls back to whole-prompt
+        # prefill for those archs.
+        assert cache is not None and chunk_offset is not None
+        C = h.shape[1]
+        pos = (chunk_offset + jnp.arange(C))[None, :]
+        q, k, v = layers.qkv_proj(cfg, p, h, pos)
+        hi = chunk_offset + C
+        if cfg.kv_quant:
+            kq, vq = cache["k"], cache["v"]
+            ks, vs = cache["k_scale"], cache["v_scale"]
+            assert hi <= kq.shape[1], "chunked prefill past the cache width"
+            kq_new, ks_new = quant_kv(k)
+            vq_new, vs_new = quant_kv(v)
+            kq = jax.lax.dynamic_update_slice(kq, kq_new, (0, chunk_offset, 0, 0))
+            vq = jax.lax.dynamic_update_slice(vq, vq_new, (0, chunk_offset, 0, 0))
+            ks = jax.lax.dynamic_update_slice(ks, ks_new, (0, chunk_offset, 0))
+            vs = jax.lax.dynamic_update_slice(vs, vs_new, (0, chunk_offset, 0))
+            o = ops.flash_attention(
+                q, dequant_kv(kq[:, :hi], ks[:, :hi]),
+                dequant_kv(vq[:, :hi], vs[:, :hi]),
+                causal=True, window=cfg.sliding_window, q_offset=chunk_offset,
+            )
+            return layers.out_proj(cfg, p, o), {
+                "k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        kc, vc = cache["k"], cache["v"]
+        assert hi <= kc.shape[1], "chunked prefill past the cache width"
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, chunk_offset, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, chunk_offset, 0, 0))
+        o = ops.flash_attention(
+            q, kc[:, :hi], vc[:, :hi],
+            causal=True, window=cfg.sliding_window, q_offset=chunk_offset,
+        )
+        return layers.out_proj(cfg, p, o), {"k": kc, "v": vc}
 
     if mode == "prefill":
         q, k, v = layers.qkv_proj(cfg, p, h, positions)
@@ -184,8 +224,11 @@ def _attn_mixer(
 
 
 def _decode_quant(cfg, p, q, k_new, v_new, cache, cache_len):
-    """int8-cache decode step: quantize the new slot, dequantize the cache
-    for the ref attention (the Pallas kernel dequantizes per tile instead)."""
+    """int8-cache decode step: quantize the new slot and attend with the
+    fused int8 decode kernel (``ops.decode_attention_quant``) — the cache
+    stays int8 in HBM; dequantization happens per tile inside the kernel
+    (the ref path dequantizes up front, bitwise-identical to the pre-fusion
+    full-cache dequantize)."""
     B = q.shape[0]
     kq, vq = cache["k"], cache["v"]
     ks, vs = cache["k_scale"], cache["v_scale"]
@@ -201,19 +244,23 @@ def _decode_quant(cfg, p, q, k_new, v_new, cache, cache_len):
     vq = jnp.where(sel4, vq_new[:, None], vq)
     ks = jnp.where(sel[..., None], ks_new[:, None], ks)
     vs = jnp.where(sel[..., None], vs_new[:, None], vs)
-    kc = dequant_kv(kq, ks)
-    vc = dequant_kv(vq, vs)
     if ring:
         eff_len = jnp.minimum(cache_len + 1, W)
-        o, _ = ops.decode_attention(q[:, 0], kc, vc, eff_len, window=None)
+        o, _ = ops.decode_attention_quant(
+            q[:, 0], kq, vq, ks, vs, eff_len, window=None)
     else:
-        o, _ = ops.decode_attention(
-            q[:, 0], kc, vc, cache_len + 1, window=cfg.sliding_window)
+        o, _ = ops.decode_attention_quant(
+            q[:, 0], kq, vq, ks, vs, cache_len + 1, window=cfg.sliding_window)
     new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
     return layers.out_proj(cfg, p, o)[:, None], new_cache
 
 
 def _ssm_mixer(cfg, p, h, mode, cache):
+    if mode == "prefill_chunk":
+        raise NotImplementedError(
+            "chunked prefill needs SSM state carried between chunks; "
+            "use whole-prompt prefill (prefill_chunk=0) for SSM/hybrid archs"
+        )
     if mode == "full":
         return ssm.apply_ssm(cfg, p, h), None
     if mode == "prefill":
@@ -233,11 +280,12 @@ def _apply_block(
     cache: Optional[Params],
     cache_len: Optional[jax.Array],
     smax: int,
+    chunk_offset: Optional[int] = None,
 ):
     mixer_kind, mlp_kind = kind
     hn = layers.apply_norm(cfg, p["norm1"], h)
     if mixer_kind == "attn":
-        mix_out, new_cache = _attn_mixer(cfg, p["attn"], hn, positions, mode, cache, cache_len, smax)
+        mix_out, new_cache = _attn_mixer(cfg, p["attn"], hn, positions, mode, cache, cache_len, smax, chunk_offset)
     else:
         mix_out, new_cache = _ssm_mixer(cfg, p["ssm"], hn, mode, cache)
 
@@ -277,6 +325,7 @@ def backbone(
     smax: int = 0,
     remat: bool = False,
     unroll: bool = False,
+    chunk_offset: Optional[int] = None,
 ):
     """Returns (h, aux_sum, new_caches).
 
@@ -296,7 +345,7 @@ def backbone(
             c_in = None if group_caches is None else group_caches[pos]
             h, a, c_out = _apply_block(
                 cfg, group_params[pos], kinds[pos],
-                h, positions, mode, c_in, cache_len, smax,
+                h, positions, mode, c_in, cache_len, smax, chunk_offset,
             )
             # sequence-parallel residual stream (Megatron-SP): between
             # blocks the seq dim shards over `model`, so the out-proj's TP
@@ -542,6 +591,57 @@ def decode_step(
     logits = (h[:, 0] @ _head_matrix(cfg, params)).astype(jnp.float32)
     logits = mask_padded_vocab(cfg, logits)
     return logits, new_caches, cache_len + 1
+
+
+def prefill_chunk(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,  # (B, C) one chunk of the prompts
+    caches,  # per-slot caches being filled (width >= offset + C)
+    *,
+    offset: int,  # static: absolute position of tokens[:, 0]
+    unroll: bool = False,
+):
+    """One chunk of a chunked prefill into existing decode caches.
+
+    The continuous-batching rollout engine uses this to break a refill
+    prompt's prefill into bounded pieces (so a long prefill never stalls
+    in-flight decodes for its full length): chunk c writes K/V into
+    ``caches`` at ``[offset, offset+C)`` and attends against the prefix
+    ``[0, offset+C)``. For bf16 caches, calling it over consecutive chunks
+    is numerically equivalent to one whole-prompt :func:`prefill` (same
+    masked softmax, up to float reassociation); with ``kv_quant`` the chunk
+    attends its prefix's quantize->dequantized K/V, which whole-prompt
+    prefill never does — the rollout engine excludes that combination.
+    Returns (last-position logits, new caches);
+    the caller owns ``cache_len`` (set it to the prompt length after the
+    final chunk). Attention-only paths; SSM mixers raise (state would need
+    to carry between chunks) and ring-bounded SWA caches are rejected by
+    width asserts."""
+    h = embed_tokens(cfg, params, tokens)
+    h, _, new_caches = backbone(
+        cfg, params, h, None, mode="prefill_chunk", caches=caches,
+        chunk_offset=offset, unroll=unroll,
+    )
+    logits = (h[:, -1] @ _head_matrix(cfg, params)).astype(jnp.float32)
+    return mask_padded_vocab(cfg, logits), new_caches
+
+
+def gather_cache_rows(caches, slots: jax.Array):
+    """Pull the per-slot cache rows at ``slots`` (batch axis 1 of every
+    leaf: leaves are stacked (N, B, ...) over layer groups)."""
+    return jax.tree.map(lambda a: jnp.take(a, slots, axis=1), caches)
+
+
+def scatter_cache_rows(caches, rows, slots: jax.Array):
+    """Slot-reset path: overwrite the arena's rows at ``slots`` with freshly
+    prefilled ``rows`` (same tree structure, batch axis 1). Out-of-range
+    slot ids are dropped — the engine pads refill batches to a fixed lane
+    count and parks the padding lanes at an out-of-range slot."""
+    return jax.tree.map(
+        lambda a, r: a.at[:, slots].set(r.astype(a.dtype), mode="drop"),
+        caches, rows,
+    )
 
 
 def mask_padded_vocab(cfg: ModelConfig, logits: jax.Array) -> jax.Array:

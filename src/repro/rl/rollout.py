@@ -44,9 +44,15 @@ def generate(
     temperature: float = 1.0,
     eos_id: Optional[int] = None,
     pad_id: int = 0,
+    budgets: Optional[jax.Array] = None,  # (B,) per-sequence response caps
     frames: Optional[jax.Array] = None,
     prefix_embeds: Optional[jax.Array] = None,
 ) -> RolloutResult:
+    """``budgets`` caps each sequence's counted response length at
+    ``min(budgets[b], max_new)`` (>=1; the first sampled token always
+    counts) — per-sample truncation for mixed-task batches. Lockstep still
+    scans all ``max_new`` steps regardless; only the continuous engine turns
+    short budgets into freed decode slots."""
     B, Lp = prompt.shape
     smax = Lp + max_new
     kw = {}
@@ -60,7 +66,8 @@ def generate(
     tok0 = sample_token(logits, k0, temperature)
     lp0 = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(B), tok0]
 
-    def body(carry, step_key):
+    def body(carry, xs):
+        step_key, j = xs  # j: 0-based scan step, emitting response pos j+2
         tok, caches, cache_len, done = carry
         logits, caches, cache_len = model.decode_step(params, tok, caches, cache_len)
         nxt = sample_token(logits, step_key, temperature)
@@ -68,12 +75,17 @@ def generate(
         nxt = jnp.where(done, pad_id, nxt)
         lp = jnp.where(done, 0.0, lp)
         new_done = done | ((nxt == eos_id) if eos_id is not None else False)
+        if budgets is not None:
+            new_done = new_done | (j + 2 >= budgets)
         return (nxt, caches, cache_len, new_done), (nxt, lp, done)
 
     done0 = (tok0 == eos_id) if eos_id is not None else jnp.zeros((B,), bool)
+    if budgets is not None:
+        done0 = done0 | (budgets <= 1)
     step_keys = jax.random.split(key, max_new - 1)
     (_, _, _, _), (toks, lps, dones) = jax.lax.scan(
-        body, (tok0, caches, cache_len, done0), step_keys
+        body, (tok0, caches, cache_len, done0),
+        (step_keys, jnp.arange(max_new - 1)),
     )
     # assemble (B, T)
     resp = jnp.concatenate([tok0[:, None], jnp.moveaxis(toks, 0, 1)], axis=1)

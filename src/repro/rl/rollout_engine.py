@@ -1,0 +1,447 @@
+"""Continuous-batching rollout engine: slot-refill generation for the
+GENERATE stage.
+
+The lockstep path (:func:`repro.rl.rollout.generate`) pads every prompt to a
+common length and scans all ``max_new`` decode steps even after every
+sequence has emitted EOS — so real token throughput collapses as
+response-length variance grows, exactly the failure mode AsyncFlow / LlamaRL
+attribute their largest wins to fixing with in-flight batching. This module
+is that fix on the DistFlow GENERATE stage:
+
+  * a fixed pool of ``num_slots`` decode slots shares ONE persistent KV-cache
+    arena (``model.init_caches(num_slots, smax)``); slot *i* is batch row *i*
+    of every cache leaf, and each slot carries its own ``cache_len`` (the
+    decode kernels already take per-sequence valid lengths);
+  * when a slot's sequence hits EOS (or its token budget) the slot is freed
+    and immediately refilled with the next prompt from the
+    :class:`PromptQueue` — a fresh prefill is scattered over the slot's cache
+    rows (``lm.scatter_cache_rows``, the slot-reset path) while the other
+    slots' in-flight state is untouched;
+  * refills are length-bucketed (prompts grouped by true length rounded up
+    to ``prefill_bucket``) so a refill batch prefills at its bucket length
+    instead of the global padded max, and optionally chunked
+    (``lm.prefill_chunk``) so one long prefill is split into bounded pieces;
+  * the decode loop is a ``lax.while_loop`` that early-exits on ``all(done)``
+    once the prompt queue drains — the engine never pays lockstep's
+    "scan to max_new regardless" tax.
+
+Determinism / equivalence contract: under a *fixed slot schedule* — one
+length bucket, ``num_slots >= batch`` (every prompt prefilled at once, no
+mid-stream refill) — the engine consumes the exact key schedule of lockstep
+``generate`` (``k0`` for the prefill sample, ``split(k2, max_new-1)`` for
+decode steps) and computes the same prefill/decode math on the same shapes,
+so it is token-for-token identical to lockstep (asserted by
+``tests/test_rollout_engine.py``). Decode steps past ``max_new - 1`` (which
+only exist once refill has happened) derive keys by ``fold_in(k2, t)``.
+
+Metrics (``engine.last_stats``, surfaced by the GENERATE stage as
+``rollout/*``): tokens/sec, padding-waste %, slot occupancy, decode steps,
+refill counts. ``docs/rollout_engine.md`` has the slot lifecycle diagram and
+the metrics glossary.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.rl.rollout import RolloutResult, sample_token
+
+
+def _true_lengths(prompts: np.ndarray, pad_id: int) -> np.ndarray:
+    """Per-row count of tokens up to and including the last non-pad token
+    (right-padded prompts; a fully-pad row counts 1 so it still prefills)."""
+    nonpad = prompts != pad_id
+    rev = nonpad[:, ::-1]
+    last = prompts.shape[1] - np.argmax(rev, axis=1)  # index after last non-pad
+    return np.where(nonpad.any(axis=1), last, 1).astype(np.int64)
+
+
+class PromptQueue:
+    """Length-bucketed FIFO over one iteration's prompts.
+
+    Each prompt's true (non-pad) length is rounded up to a multiple of
+    ``bucket`` (0 = a single bucket at the batch's padded length — the
+    lockstep-equivalent schedule); refills pop from one bucket at a time so
+    every prefill batch shares a padded length. Within a bucket, dataset
+    order is preserved.
+    """
+
+    def __init__(self, prompts: np.ndarray, *, pad_id: int, bucket: int = 0,
+                 order=None):
+        self.prompts = prompts
+        B, Lp = prompts.shape
+        self.true_len = _true_lengths(prompts, pad_id)
+        if bucket <= 0:
+            blens = np.full(B, Lp, np.int64)
+        else:
+            blens = np.minimum(-(-self.true_len // bucket) * bucket, Lp)
+        self.bucket_len = blens
+        self._buckets: Dict[int, deque] = {}
+        for i in (range(B) if order is None else order):
+            self._buckets.setdefault(int(blens[i]), deque()).append(i)
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._buckets.values())
+
+    def pop(self, n: int) -> Tuple[int, List[int]]:
+        """Pop up to ``n`` prompt indices from the fullest bucket (ties break
+        toward the shorter bucket length). Returns (bucket_len, indices)."""
+        lb = max(self._buckets, key=lambda b: (len(self._buckets[b]), -b))
+        q = self._buckets[lb]
+        take = [q.popleft() for _ in range(min(n, len(q)))]
+        if not q:
+            del self._buckets[lb]
+        return lb, take
+
+
+class ContinuousRolloutEngine:
+    """Slot-based continuous-batching generation engine.
+
+    Drop-in for the jitted lockstep engine at the GENERATE stage: callable as
+    ``engine(params, prompts, key) -> RolloutResult`` with identical output
+    contract (tokens / response_mask / old_logprob / lengths in dataset
+    order). Host code orchestrates slot bookkeeping; the two hot paths — the
+    per-bucket refill prefill and the early-exiting decode burst — are jitted
+    once per shape and reused across iterations.
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        *,
+        max_new: int,
+        temperature: float = 1.0,
+        eos_id: Optional[int] = None,
+        pad_id: int = 0,
+        num_slots: int = 0,
+        prefill_chunk: int = 0,
+        prefill_bucket: int = 0,
+        refill_threshold: int = 1,
+    ):
+        if model.is_encdec or model.cfg.num_prefix_embeds:
+            raise ValueError(
+                "the continuous engine supports text decoder-only archs; "
+                "use engine='lockstep' for enc-dec / prefix-modality models"
+            )
+        self.model = model
+        self.max_new = max_new
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.num_slots = num_slots
+        self.prefill_bucket = prefill_bucket
+        # minimum count of newly-freed slots before a burst hands control
+        # back for refill (while prompts pend). 1 = refill eagerly (maximum
+        # occupancy); higher values trade a little slot idleness for fewer
+        # host round-trips — useful when dispatch overhead is comparable to
+        # a decode step, as on CPU hosts
+        self.refill_threshold = max(1, refill_threshold)
+        # chunked prefill is attention-only (SSM state doesn't carry between
+        # chunks), needs an unwrapped cache (no SWA ring), and excludes
+        # int8 caches: a chunk would attend the quantize->dequantized K/V
+        # of its own prefix, diverging from whole-prompt prefill by far
+        # more than float reassociation (~3e-2 in behaviour logprobs)
+        kinds = model.cfg.layer_kinds()
+        self._can_chunk = (
+            prefill_chunk > 0
+            and all(k[0] == "attn" for k in kinds)
+            and model.cfg.sliding_window is None
+            and not model.cfg.kv_quant
+        )
+        self.prefill_chunk = prefill_chunk if self._can_chunk else 0
+        self.last_stats: Dict[str, float] = {}
+        self._refill_jit: Dict[Tuple[int, int, int], callable] = {}
+        self._burst_jit: Dict[Tuple[int, int], callable] = {}
+
+    # ------------------------------------------------------------------ #
+    # jitted halves
+    # ------------------------------------------------------------------ #
+    def _make_refill(self, R: int, Lb: int, smax: int):
+        """Refill ``R`` lanes with a (padded) prompt batch of width ``Lb``:
+        prefill, scatter the fresh cache rows over the arena at ``slots``
+        (out-of-range ids = padding lanes, dropped), sample each lane's first
+        response token, and reset the per-slot output rows. ``R`` is the
+        refill batch width — the caller rounds the actual refill count up to
+        a power of two so late-stream single-slot refills don't pay a
+        full-pool prefill (and the compile count stays log-bounded)."""
+        model, temp = self.model, self.temperature
+        eos, pad, max_new = self.eos_id, self.pad_id, self.max_new
+        chunk = self.prefill_chunk
+
+        def refill(params, caches, prompts, slots, lane_budget, key,
+                   cur_tok, cache_len, resp_len, done, budget,
+                   out_tok, out_lp):
+            if chunk > 0:
+                rows = model.init_caches(R, smax)
+                logits = None
+                for off in range(0, Lb, chunk):
+                    logits, rows = model.prefill_chunk(
+                        params, prompts[:, off:off + chunk], rows, offset=off
+                    )
+            else:
+                logits, rows, _ = model.prefill(params, prompts, smax=smax)
+            caches = model.scatter_cache_rows(caches, rows, slots)
+            tok0 = sample_token(logits, key, temp)
+            lane = jnp.arange(R)
+            lp0 = jax.nn.log_softmax(logits, axis=-1)[lane, tok0]
+            done0 = (tok0 == eos) if eos is not None else jnp.zeros((R,), bool)
+            row_tok = jnp.full((R, max_new), pad, out_tok.dtype).at[:, 0].set(tok0)
+            row_lp = jnp.zeros((R, max_new), out_lp.dtype).at[:, 0].set(lp0)
+            cur_tok = cur_tok.at[slots].set(tok0, mode="drop")
+            cache_len = cache_len.at[slots].set(Lb, mode="drop")
+            resp_len = resp_len.at[slots].set(1, mode="drop")
+            done = done.at[slots].set(
+                done0 | (lane_budget <= 1), mode="drop")
+            budget = budget.at[slots].set(lane_budget, mode="drop")
+            out_tok = out_tok.at[slots].set(row_tok, mode="drop")
+            out_lp = out_lp.at[slots].set(row_lp, mode="drop")
+            return (caches, cur_tok, cache_len, resp_len, done, budget,
+                    out_tok, out_lp)
+
+        return jax.jit(refill)
+
+    def _make_burst(self, S: int):
+        """The decode loop: a ``lax.while_loop`` stepping every slot, exiting
+        as soon as (a) every slot is done — the early-exit on a drained
+        queue — or (b) any slot *newly* finishes while prompts are pending,
+        handing control back to the host for an immediate refill."""
+        model, temp = self.model, self.temperature
+        eos, pad, max_new = self.eos_id, self.pad_id, self.max_new
+        T = max_new - 1  # lockstep's decode-step count (key schedule length)
+        threshold = self.refill_threshold
+
+        def burst(params, caches, cur_tok, cache_len, resp_len, done, budget,
+                  out_tok, out_lp, t, occ, step_keys, k2, has_pending):
+            n_done_entry = jnp.sum(done)
+            lane = jnp.arange(S)
+
+            def cond(st):
+                done = st[4]
+                any_active = ~jnp.all(done)
+                below_threshold = (jnp.sum(done) - n_done_entry) < threshold
+                return any_active & (below_threshold | ~has_pending)
+
+            def body(st):
+                (caches, cur_tok, cache_len, resp_len, done, budget,
+                 out_tok, out_lp, t, occ) = st
+                occ = occ + jnp.sum(~done)
+                logits, caches, cache_len = model.decode_step(
+                    params, cur_tok, caches, cache_len
+                )
+                # lockstep's exact key schedule for the first T steps
+                # (jax.random.split is NOT prefix-stable, so the array is
+                # sized exactly T); steps beyond T — which only exist after
+                # a refill — fold the step index into k2
+                kt = jax.lax.select(
+                    t < T,
+                    step_keys[jnp.minimum(t, T - 1)],
+                    jax.random.fold_in(k2, t),
+                )
+                nxt = sample_token(logits, kt, temp)
+                lp = jax.nn.log_softmax(logits, axis=-1)[lane, nxt]
+                nxt = jnp.where(done, pad, nxt)
+                lp = jnp.where(done, 0.0, lp)
+                wr = (~done) & (resp_len < max_new)
+                idx = jnp.where(wr, resp_len, max_new)  # OOB -> dropped
+                out_tok = out_tok.at[lane, idx].set(nxt, mode="drop")
+                out_lp = out_lp.at[lane, idx].set(lp, mode="drop")
+                resp_len = resp_len + wr
+                new_done = done
+                if eos is not None:
+                    new_done = new_done | (nxt == eos)
+                new_done = new_done | (resp_len >= budget)
+                return (caches, nxt, cache_len,
+                        resp_len, new_done, budget, out_tok, out_lp,
+                        t + 1, occ)
+
+            st = (caches, cur_tok, cache_len, resp_len, done, budget,
+                  out_tok, out_lp, t, occ)
+            return jax.lax.while_loop(cond, body, st)
+
+        return jax.jit(burst)
+
+    # ------------------------------------------------------------------ #
+    def __call__(self, params, prompts, key,
+                 budgets: Optional[np.ndarray] = None) -> RolloutResult:
+        """``budgets`` (B,) caps each sequence's response length at
+        ``min(budgets[b], max_new)`` — same semantics as lockstep
+        ``generate(budgets=...)``, but here a capped sequence *frees its
+        slot* instead of padding out the scan."""
+        t_start = time.perf_counter()
+        prompts_np = np.asarray(jax.device_get(prompts), np.int32)
+        B, Lp = prompts_np.shape
+        max_new = self.max_new
+        if budgets is None:
+            budgets_np = np.full(B, max_new, np.int32)
+        else:
+            budgets_np = np.clip(
+                np.asarray(jax.device_get(budgets), np.int32), 1, max_new)
+        S = self.num_slots if self.num_slots > 0 else B
+        S = max(1, min(S, B))
+        smax = Lp + max_new
+        # known budgets + a real queue (S < B) -> longest-first (LPT) slot
+        # packing: long sequences start first instead of draining alone at
+        # the tail (the same policy as the coordinator's length-aware
+        # balancing). With S == B there is no queue, and dataset order is
+        # kept — that's the lockstep-equivalent fixed schedule.
+        order = (np.argsort(-budgets_np, kind="stable")
+                 if budgets is not None and S < B else None)
+        queue = PromptQueue(prompts_np, pad_id=self.pad_id,
+                            bucket=self.prefill_bucket, order=order)
+        prefill_true_tokens = int(queue.true_len.sum())
+
+        k0, k2 = jax.random.split(key)
+        T = max_new - 1
+        step_keys = (jax.random.split(k2, T) if T > 0
+                     else jnp.zeros((1, 2), jnp.uint32))
+
+        # slot state (device) -------------------------------------------- #
+        caches = self.model.init_caches(S, smax)
+        cur_tok = jnp.zeros((S,), jnp.int32)
+        cache_len = jnp.zeros((S,), jnp.int32)
+        resp_len = jnp.zeros((S,), jnp.int32)
+        done = jnp.ones((S,), bool)  # every slot starts free/idle
+        budget = jnp.full((S,), max_new, jnp.int32)
+        out_tok = jnp.full((S, max_new), self.pad_id, jnp.int32)
+        out_lp = jnp.zeros((S, max_new), jnp.float32)
+        t = jnp.zeros((), jnp.int32)
+        occ = jnp.zeros((), jnp.int32)
+
+        # host bookkeeping ------------------------------------------------ #
+        slot_seq = np.full(S, -1, np.int64)  # dataset row held by each slot
+        res_tok = np.full((B, max_new), self.pad_id, np.int32)
+        res_lp = np.zeros((B, max_new), np.float32)
+        res_len = np.zeros((B,), np.int32)
+        completed = 0
+        refills = 0
+        prefill_lane_tokens = 0
+        bursts = 0
+
+        burst = self._burst_jit.get((S, smax))
+        if burst is None:
+            burst = self._burst_jit[(S, smax)] = self._make_burst(S)
+
+        while completed < B:
+            # one bundled host sync per visit: flush state for every slot
+            done_h, resp_len_h, out_tok_h, out_lp_h = jax.device_get(
+                (done, resp_len, out_tok, out_lp))
+            # flush finished slots into the per-sequence results
+            for s in range(S):
+                if done_h[s] and slot_seq[s] >= 0:
+                    row = slot_seq[s]
+                    res_tok[row] = out_tok_h[s]
+                    res_lp[row] = out_lp_h[s]
+                    res_len[row] = resp_len_h[s]
+                    slot_seq[s] = -1
+                    completed += 1
+            if completed >= B:
+                break
+            # refill every free slot, one jitted prefill per length bucket
+            free = [s for s in range(S) if slot_seq[s] < 0]
+            while free and len(queue):
+                lb, idxs = queue.pop(len(free))
+                lanes, free = free[: len(idxs)], free[len(idxs):]
+                # pad the refill batch to the next power of two (capped at
+                # the pool size), not the full pool: a late-stream
+                # single-slot refill prefills 1 lane, not num_slots — and a
+                # full-pool fill keeps the exact pool shape, which is what
+                # the lockstep-equivalence schedule runs
+                R = 1
+                while R < len(idxs):
+                    R *= 2
+                R = min(R, S)
+                batch = np.zeros((R, lb), np.int32)
+                batch[: len(idxs)] = prompts_np[idxs][:, :lb]
+                slots_arr = jnp.asarray(
+                    np.concatenate([lanes, np.full(R - len(lanes), S)])
+                    .astype(np.int32)
+                )
+                lane_budget = np.full(R, max_new, np.int32)
+                lane_budget[: len(idxs)] = budgets_np[idxs]
+                rk = k0 if refills == 0 else jax.random.fold_in(k0, refills)
+                rf = self._refill_jit.get((R, lb, smax))
+                if rf is None:
+                    rf = self._refill_jit[(R, lb, smax)] = self._make_refill(
+                        R, lb, smax)
+                (caches, cur_tok, cache_len, resp_len, done, budget,
+                 out_tok, out_lp) = rf(
+                    params, caches, jnp.asarray(batch), slots_arr,
+                    jnp.asarray(lane_budget), rk,
+                    cur_tok, cache_len, resp_len, done, budget,
+                    out_tok, out_lp,
+                )
+                for lane, seq in zip(lanes, idxs):
+                    slot_seq[lane] = seq
+                refills += 1
+                # count the lanes the prefill actually executed (incl. the
+                # pow2 padding lanes) so prefill_waste reflects real compute
+                prefill_lane_tokens += R * lb
+            if not any(slot_seq[s] >= 0 for s in range(S)):
+                break  # queue drained and nothing in flight
+            # a lane refilled immediately-done (EOS at its first token /
+            # budget 1) is counted in the burst's n_done_entry, so the loop
+            # below won't mistake it for a fresh completion; it flushes on
+            # the next visit
+            has_pending = jnp.asarray(len(queue) > 0)
+            (caches, cur_tok, cache_len, resp_len, done, budget,
+             out_tok, out_lp, t, occ) = burst(
+                params, caches, cur_tok, cache_len, resp_len, done, budget,
+                out_tok, out_lp, t, occ, step_keys, k2, has_pending,
+            )
+            bursts += 1
+
+        # assemble RolloutResult in dataset order ------------------------- #
+        tokens = np.concatenate([prompts_np, res_tok], axis=1)
+        mask = np.zeros((B, Lp + max_new), bool)
+        for b in range(B):
+            mask[b, Lp: Lp + res_len[b]] = True
+        old_lp = np.concatenate(
+            [np.zeros((B, Lp), np.float32), res_lp], axis=1)
+
+        wall = time.perf_counter() - t_start
+        steps = int(jax.device_get(t))
+        occ_steps = int(jax.device_get(occ))
+        gen_tokens = int(res_len.sum())
+        decode_tokens = gen_tokens - B  # first tokens come from prefill
+        lane_steps = S * steps
+        self.last_stats = {
+            "tokens": float(gen_tokens),
+            "wall_s": wall,
+            "tokens_per_s": gen_tokens / wall if wall > 0 else 0.0,
+            "decode_steps": float(steps),
+            "bursts": float(bursts),
+            "refills": float(refills),
+            "num_slots": float(S),
+            "slot_occupancy": occ_steps / lane_steps if lane_steps else 1.0,
+            "padding_waste": (
+                1.0 - decode_tokens / lane_steps if lane_steps else 0.0),
+            "prefill_lane_tokens": float(prefill_lane_tokens),
+            "prefill_true_tokens": float(prefill_true_tokens),
+            "prefill_waste": (
+                1.0 - prefill_true_tokens / prefill_lane_tokens
+                if prefill_lane_tokens else 0.0),
+        }
+        return RolloutResult(
+            jnp.asarray(tokens),
+            jnp.asarray(mask),
+            jnp.asarray(old_lp),
+            jnp.asarray(res_len.astype(np.int32)),
+        )
+
+
+def lockstep_waste(lengths: np.ndarray, max_new: int) -> float:
+    """Padding-waste of the lockstep schedule for the same responses: the
+    fraction of decode lane-steps (B x (max_new-1)) that produced no counted
+    token. The benchmark arm reports this next to the engine's measured
+    waste."""
+    lengths = np.asarray(lengths)
+    B = len(lengths)
+    lane_steps = B * max(max_new - 1, 1)
+    decode_tokens = int(lengths.sum()) - B
+    return 1.0 - decode_tokens / lane_steps if lane_steps else 0.0

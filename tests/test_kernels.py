@@ -14,6 +14,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as fa_pallas
 from repro.kernels.decode_attention import decode_attention as da_pallas
+from repro.kernels.decode_attention import decode_attention_quant as daq_pallas
 from repro.kernels.ssd import ssd as ssd_pallas
 from repro.kernels.rmsnorm import rmsnorm as rn_pallas
 
@@ -117,6 +118,67 @@ def test_decode_attention_sliding_window():
     o_r, _ = ref.decode_attention(q, kk, vv, cl, window=64, return_lse=True)
     o_p, _ = da_pallas(q, kk, vv, cl, window=64, block_s=64, interpret=True)
     np.testing.assert_allclose(np.array(o_p), np.array(o_r), atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# decode attention, fused int8 dequant (kv_quant cache path)
+# --------------------------------------------------------------------------- #
+def _quantized_cache(key, B, S, KVH, D):
+    from repro.models.lm import quant_kv
+
+    k1, k2 = jax.random.split(key)
+    kk = jax.random.normal(k1, (B, S, KVH, D), jnp.bfloat16)
+    vv = jax.random.normal(k2, (B, S, KVH, D), jnp.bfloat16)
+    kq, ks = quant_kv(kk)
+    vq, vs = quant_kv(vv)
+    return kq, vq, ks, vs
+
+
+@pytest.mark.parametrize("S,H,KVH,D,block", [
+    (128, 4, 2, 32, 64),   # GQA, per-slot varied fills
+    (256, 4, 4, 32, 64),   # MHA
+    (512, 8, 2, 64, 128),  # larger cache
+    (256, 16, 1, 32, 64),  # MQA
+])
+@pytest.mark.parametrize("window", [None, 96])
+def test_decode_attention_quant(S, H, KVH, D, block, window):
+    """Fused-dequant Pallas kernel vs the dequantize-up-front oracle, across
+    per-slot variable cache_len (the continuous engine's slot fills)."""
+    k = jax.random.split(jax.random.PRNGKey(5), 2)
+    B = 3
+    q = jax.random.normal(k[0], (B, H, D), jnp.float32)
+    kq, vq, ks, vs = _quantized_cache(k[1], B, S, KVH, D)
+    cl = jnp.array([S // 3, S, 1], jnp.int32)
+    o_r, l_r = ref.decode_attention_quant(
+        q, kq, vq, ks, vs, cl, window=window, return_lse=True)
+    o_p, l_p = daq_pallas(q, kq, vq, ks, vs, cl, window=window,
+                          block_s=block, interpret=True)
+    np.testing.assert_allclose(np.array(o_p, np.float32),
+                               np.array(o_r, np.float32), atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(np.array(l_p), np.array(l_r),
+                               atol=1e-2, rtol=1e-2)
+
+
+def test_decode_attention_quant_matches_unfused():
+    """The fused kernel must agree with dequantizing the whole cache and
+    running the plain kernel — the exact computation it replaces in
+    ``lm._decode_quant``."""
+    from repro.models.lm import dequant_kv
+
+    k = jax.random.split(jax.random.PRNGKey(6), 2)
+    B, S, H, KVH, D = 2, 256, 4, 2, 32
+    q = jax.random.normal(k[0], (B, H, D), jnp.float32)
+    kq, vq, ks, vs = _quantized_cache(k[1], B, S, KVH, D)
+    cl = jnp.array([77, 200], jnp.int32)
+    o_fused, l_fused = daq_pallas(q, kq, vq, ks, vs, cl, block_s=64,
+                                  interpret=True)
+    o_unf, l_unf = da_pallas(q, dequant_kv(kq, ks), dequant_kv(vq, vs), cl,
+                             block_s=64, interpret=True)
+    np.testing.assert_allclose(np.array(o_fused, np.float32),
+                               np.array(o_unf, np.float32),
+                               atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(np.array(l_fused), np.array(l_unf),
+                               atol=1e-2, rtol=1e-2)
 
 
 # --------------------------------------------------------------------------- #

@@ -12,6 +12,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as da_pallas
+from repro.kernels.decode_attention import decode_attention_quant as daq_pallas
 from repro.kernels.flash_attention import flash_attention as fa_pallas
 from repro.kernels.ssd import ssd as ssd_pallas
 
@@ -62,6 +63,30 @@ def test_decode_attention_random_geometry(geo, seed, data):
                                atol=2e-4, rtol=2e-4)
     np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_r),
                                atol=1e-3, rtol=1e-3)
+
+
+@given(attn_geometry(), st.integers(0, 2**31 - 1), st.data())
+def test_decode_attention_quant_random_geometry(geo, seed, data):
+    """Fused int8-dequant decode kernel vs the dequantize-up-front oracle
+    over random GQA geometry and per-slot cache fills."""
+    from repro.models.lm import quant_kv
+
+    kvh, h, d, s, block, _ = geo
+    ks_ = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B = 2
+    q = jax.random.normal(ks_[0], (B, h, d), jnp.float32)
+    kq, kscale = quant_kv(jax.random.normal(ks_[1], (B, s, kvh, d), jnp.bfloat16))
+    vq, vscale = quant_kv(jax.random.normal(ks_[2], (B, s, kvh, d), jnp.bfloat16))
+    cl = jnp.asarray(
+        [data.draw(st.integers(1, s)) for _ in range(B)], jnp.int32)
+    o_r, l_r = ref.decode_attention_quant(
+        q, kq, vq, kscale, vscale, cl, return_lse=True)
+    o_p, l_p = daq_pallas(q, kq, vq, kscale, vscale, cl, block_s=block,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r),
+                               atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_r),
+                               atol=1e-2, rtol=1e-2)
 
 
 @given(

@@ -161,6 +161,78 @@ def test_eos_stops_counting(tiny_model):
 # --------------------------------------------------------------------------- #
 # function reward
 # --------------------------------------------------------------------------- #
+def test_generate_max_new_1_zero_length_scan(tiny_model):
+    """max_new=1 means the decode scan has zero steps: the response is the
+    single prefill-sampled token, never pad-extended."""
+    cfg, model, params = tiny_model
+    B, Lp = 3, 5
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (B, Lp), 3, 200)
+    res = generate(model, params, prompt, jax.random.PRNGKey(8), max_new=1,
+                   temperature=1.0, eos_id=ByteTokenizer().eos_id)
+    assert res.tokens.shape == (B, Lp + 1)
+    assert np.all(np.asarray(res.lengths) == 1)
+    assert np.all(np.asarray(res.response_mask[:, Lp]))
+
+
+def test_generate_all_eos_at_step_0(tiny_model):
+    """Zeroed params make logits constant (argmax = token 0); with eos_id=0
+    every sequence is done at its first sampled token — mask counts exactly
+    that token and everything after is pad with zero logprob."""
+    cfg, model, params = tiny_model
+    zeroed = jax.tree.map(jnp.zeros_like, params)
+    B, Lp, T = 4, 5, 8
+    prompt = jax.random.randint(jax.random.PRNGKey(9), (B, Lp), 3, 200)
+    res = generate(model, zeroed, prompt, jax.random.PRNGKey(10), max_new=T,
+                   temperature=0.0, eos_id=0, pad_id=0)
+    assert np.all(np.asarray(res.lengths) == 1)
+    toks = np.asarray(res.tokens[:, Lp:])
+    assert np.all(toks == 0)  # eos then pad (both id 0)
+    assert np.all(np.asarray(res.old_logprob[:, Lp + 1:]) == 0.0)
+
+
+def test_generate_max_new_1_through_stage():
+    """The GENERATE stage (and the whole DAG behind it) must run with a
+    one-token response budget — the degenerate scan shape."""
+    from repro.core import build_pipeline
+    from repro.rl import RLConfig
+
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260)
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=1, lr=1e-4)
+    pipe = build_pipeline(cfg, rl, prompts_per_iter=4)
+    metrics = pipe.worker.run_iteration()
+    assert metrics["rollout/mean_len"] == 1.0
+    assert metrics["rollout/tokens"] == 8.0  # 4 prompts x group 2 x 1 token
+    assert any(k.startswith("actor/") for k in metrics)
+
+
+def test_generate_all_eos_step0_through_stage():
+    """All sequences EOS at their first token, through the GENERATE stage:
+    zero the actor weights and rebind the generation engine with eos_id=0
+    (constant logits argmax); the full iteration — reward, advantage, train —
+    must consume the 1-token trajectories."""
+    import functools
+
+    from repro.core import build_pipeline
+    from repro.models import get_model as _gm
+    from repro.rl import RLConfig
+    from repro.rl import rollout as rollout_mod
+
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260)
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=6, lr=1e-4)
+    pipe = build_pipeline(cfg, rl, prompts_per_iter=4)
+    model = _gm(cfg)
+    pipe.ctx.actor_state = pipe.ctx.actor_state._replace(
+        params=jax.tree.map(jnp.zeros_like, pipe.ctx.actor_state.params)
+    )
+    pipe.ctx.engines["generate"] = jax.jit(functools.partial(
+        rollout_mod.generate, model,
+        max_new=rl.max_new_tokens, temperature=0.0, eos_id=0, pad_id=0,
+    ))
+    metrics = pipe.worker.run_iteration()
+    assert metrics["rollout/mean_len"] == 1.0
+    assert any(k.startswith("actor/") for k in metrics)
+
+
 def test_math_reward_tokens_exact_and_partial():
     tok = ByteTokenizer()
     ds_prompt = tok.encode("12+34=")
