@@ -1,0 +1,166 @@
+"""Multi-turn environment arm: single-turn vs 3-turn CalculatorToolEnv
+generation on the continuous engine.
+
+Both arms run the SAME tiny model, prompts, and slot pool through the
+episode loop (``repro.rl.envs``); the multi-turn arm's episodes continue
+through KV-preserving continuations — the saved rows are scattered back over
+a freed slot and ONLY the feed tokens (observation + one carried response
+token) run through the decode path. The tiny random model essentially never
+emits a digit-leading answer, so calculator episodes run the full 3 turns:
+the arm exercises the continuation machinery at full tilt.
+
+Reported per arm (CSV rows via benchmarks.common.emit, and the committed
+``results/BENCH_multiturn.json`` baseline via ``--json``):
+
+  * tokens/sec            — counted ACTION tokens / measured wall-clock
+                            (observation tokens are env output, not policy
+                            throughput)
+  * turns/episode         — mean env turns actually taken
+  * slot occupancy        — active-slot-steps / lane-steps: the turn-overlap
+                            measure (continuations from one episode decode
+                            while other episodes' turns are mid-flight)
+  * prefill turn2+ tokens — tokens fed on later turns; the KV-reuse ratio
+                            compares this against what full re-prefill of
+                            every continuation's prefix would have cost
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict
+
+# allow `python benchmarks/multiturn.py` from the repo root (same dance as
+# benchmarks/run.py): make the `benchmarks` package importable
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, tiny_cfg
+from repro.configs.base import EnvConfig
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import get_model
+from repro.rl import envs as envs_mod
+from repro.rl.reward import make_math_prompts
+from repro.rl.rollout_engine import ContinuousRolloutEngine
+
+B = 32  # episodes per iteration
+MAX_NEW = 16  # per-turn response budget
+SLOTS = 8  # engine decode-slot pool
+TURNS = 3  # multi-turn arm's episode cap
+OBS_BUDGET = 8  # observation clip ("<result>=" / ";aa+bb=" both fit)
+
+
+def _make_engine(model, tok, max_turns: int) -> ContinuousRolloutEngine:
+    cfg = EnvConfig(name="calculator", max_turns=max_turns,
+                    obs_budget=OBS_BUDGET)
+    rt = envs_mod.EnvRuntime(envs_mod.get_env("calculator"), cfg, tok)
+    return ContinuousRolloutEngine(
+        model, max_new=MAX_NEW, temperature=1.0, eos_id=tok.eos_id,
+        pad_id=tok.pad_id, num_slots=SLOTS, refill_threshold=2,
+        env=rt, max_turns=max_turns, turn_budget=0, obs_budget=OBS_BUDGET,
+    )
+
+
+def _run_arm(model, params, tok, prompts, keys, iters, max_turns) -> Dict:
+    eng = _make_engine(model, tok, max_turns)
+    eng(params, prompts, keys[-1])  # warmup (compiles)
+    tokens = 0
+    turns, occ, cont_tok, obs_tok, prefix_cost = [], [], 0, 0, 0
+    t0 = time.perf_counter()
+    for i in range(iters):
+        res = eng(params, prompts, keys[i])
+        tokens += int(np.asarray(res.lengths).sum())
+        s = eng.last_stats
+        turns.append(s["turns_mean"])
+        occ.append(s["slot_occupancy"])
+        cont_tok += int(s["prefill_tokens_turn2plus"])
+        obs_tok += int(s["obs_tokens"])
+        # what re-prefilling every continuation's full prefix would have
+        # cost: role_mask rows give per-episode prefix sizes per turn
+        rm = np.asarray(res.role_mask)
+        ep_turns = np.asarray(eng.last_env["turns"])
+        Lp = prompts.shape[1]
+        nonpad = (rm > 0).sum(axis=1) + Lp
+        # conservative estimate: each continuation would re-prefill at least
+        # the prompt plus roughly half of what the episode generated (its
+        # running prefix); episodes that never continued cost nothing
+        cont_ep = ep_turns > 1
+        prefix_cost += int(((ep_turns - 1) * Lp).sum()) + int(
+            ((nonpad - Lp) * cont_ep).sum() // 2)
+    dt = time.perf_counter() - t0
+    return {
+        "s_per_iter": dt / iters,
+        "tokens_per_s": tokens / dt,
+        "action_tokens_per_iter": tokens / iters,
+        "turns_per_episode": float(np.mean(turns)),
+        "slot_occupancy": float(np.mean(occ)),
+        "prefill_turn2plus_tokens": cont_tok / iters,
+        "obs_tokens_per_iter": obs_tok / iters,
+        "reprefill_cost_estimate": prefix_cost / iters,
+    }
+
+
+def run(iters: int = 3, seed: int = 0) -> Dict:
+    cfg = tiny_cfg()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    tok = ByteTokenizer()
+    rng = np.random.default_rng(seed + 1)
+    prompts, _ = make_math_prompts(rng, B, tok)
+    prompts = jax.numpy.asarray(prompts)
+    keys = [jax.random.fold_in(jax.random.PRNGKey(seed + 3), i)
+            for i in range(iters + 1)]
+
+    single = _run_arm(model, params, tok, prompts, keys, iters, max_turns=1)
+    multi = _run_arm(model, params, tok, prompts, keys, iters,
+                     max_turns=TURNS)
+    kv_saved = multi["reprefill_cost_estimate"] - \
+        multi["prefill_turn2plus_tokens"]
+    return {
+        "workload": {
+            "batch": B, "max_new": MAX_NEW, "num_slots": SLOTS,
+            "max_turns": TURNS, "obs_budget": OBS_BUDGET, "iters": iters,
+            "env": "calculator",
+        },
+        "single_turn": single,
+        "multi_turn": multi,
+        # continuation tokens per iter the KV-reuse path avoided
+        # re-prefilling (vs a conservative full-reprefill estimate)
+        "kv_reuse_saved_tokens_per_iter": kv_saved,
+        "turn_overlap_occupancy": multi["slot_occupancy"],
+    }
+
+
+def main() -> None:
+    r = run()
+    st, mt = r["single_turn"], r["multi_turn"]
+    emit("multiturn/single_s_per_iter", st["s_per_iter"] * 1e6,
+         f"tokens_per_s={st['tokens_per_s']:.0f} "
+         f"occupancy_pct={st['slot_occupancy'] * 100:.1f}")
+    emit("multiturn/multi3_s_per_iter", mt["s_per_iter"] * 1e6,
+         f"tokens_per_s={mt['tokens_per_s']:.0f} "
+         f"turns={mt['turns_per_episode']:.2f} "
+         f"occupancy_pct={mt['slot_occupancy'] * 100:.1f}")
+    emit("multiturn/kv_reuse_saved_tokens", r["kv_reuse_saved_tokens_per_iter"],
+         f"prefill_turn2plus={mt['prefill_turn2plus_tokens']:.0f} "
+         f"obs_tokens={mt['obs_tokens_per_iter']:.0f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the BENCH_multiturn.json baseline here")
+    args = ap.parse_args()
+    result = run(iters=args.iters, seed=args.seed)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.json}")
+    print(json.dumps(result, indent=2))

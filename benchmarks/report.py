@@ -81,6 +81,35 @@ def rollout_table() -> str:
     return "\n".join(out)
 
 
+def multiturn_table() -> str:
+    """Render the committed multi-turn env baseline (BENCH_multiturn.json):
+    single-turn vs 3-turn calculator throughput, turn-overlap occupancy, and
+    KV-reuse savings."""
+    path = os.path.join(RESULTS, "BENCH_multiturn.json")
+    if not os.path.exists(path):
+        return ""
+    r = json.load(open(path))
+    wl, st, mt = r["workload"], r["single_turn"], r["multi_turn"]
+    out = [
+        f"## Multi-turn environments ({wl['env']}, batch {wl['batch']}, "
+        f"max_new {wl['max_new']}, {wl['num_slots']} slots)\n",
+        "| arm | s/iter | action tok/s | turns/ep | slot occupancy "
+        "| turn2+ prefill tok |",
+        "|---|---|---|---|---|---|",
+        f"| single-turn | {st['s_per_iter']:.4f} | {st['tokens_per_s']:.0f} "
+        f"| {st['turns_per_episode']:.2f} | {st['slot_occupancy'] * 100:.1f}% "
+        f"| {st['prefill_turn2plus_tokens']:.0f} |",
+        f"| {wl['max_turns']}-turn | {mt['s_per_iter']:.4f} "
+        f"| {mt['tokens_per_s']:.0f} | {mt['turns_per_episode']:.2f} "
+        f"| {mt['slot_occupancy'] * 100:.1f}% "
+        f"| {mt['prefill_turn2plus_tokens']:.0f} |",
+        f"\n**KV reuse saves ~{r['kv_reuse_saved_tokens_per_iter']:.0f} "
+        f"re-prefill tokens/iter**; continuations overlap other episodes' "
+        f"turns at {r['turn_overlap_occupancy'] * 100:.1f}% occupancy.",
+    ]
+    return "\n".join(out)
+
+
 def main() -> None:
     import sys
 
@@ -88,6 +117,9 @@ def main() -> None:
     rt = rollout_table()
     if rt:
         print(rt + "\n")
+    mtt = multiturn_table()
+    if mtt:
+        print(mtt + "\n")
     print(f"## Dry-run{suffix} (single-pod 16x16 = 256 chips, "
           "multi-pod 2x16x16 = 512)\n")
     rows = json.load(open(os.path.join(RESULTS, f"dryrun_compile{suffix}.json")))

@@ -17,6 +17,7 @@ def main() -> None:
         algorithms,
         async_pipeline,
         coordinator,
+        multiturn,
         rollout,
         fig09_ppo_throughput,
         fig10_grpo_throughput,
@@ -38,6 +39,7 @@ def main() -> None:
         ("coordinator", coordinator.main),
         ("async_pipeline", async_pipeline.main),
         ("rollout", rollout.main),
+        ("multiturn", multiturn.main),
         ("algorithms", algorithms.main),
         ("roofline", roofline.main),
     ]

@@ -34,12 +34,14 @@ else
   # subprocess-heavy multidevice file, and the kernel sweeps dominate.
   # test_rollout_engine (~1 min of engine compiles) rides with chunk 2,
   # the lightest chunk in the last measured layout (603s vs 987s for the
-  # heaviest under 5-way parallel contention).
+  # heaviest under 5-way parallel contention). test_envs (~2 min fast tests
+  # + ~100s calculator-GRPO learning run) rides with chunk 4, the second-
+  # lightest in that layout.
   CHUNKS=(
     "tests/test_pipeline.py tests/test_rl.py tests/test_extensions.py"
     "tests/test_multidevice.py tests/test_core.py tests/test_ft.py tests/test_coordinator.py tests/test_rollout_engine.py"
     "tests/test_kernels.py tests/test_kernels_hypothesis.py tests/test_property.py tests/test_models_units.py tests/test_async_pipeline.py tests/test_tooling.py"
-    "tests/test_algorithms.py tests/test_benchmarks.py tests/test_sharding.py tests/test_arch_smoke.py tests/test_workloads.py"
+    "tests/test_algorithms.py tests/test_benchmarks.py tests/test_sharding.py tests/test_arch_smoke.py tests/test_workloads.py tests/test_envs.py"
   )
   run_docs=1
 

@@ -29,6 +29,7 @@ from typing import Any, Dict, Optional, Tuple
 from repro.configs.base import (
     AsyncPipelineConfig,
     DataCoordinatorConfig,
+    EnvConfig,
     ModelConfig,
     RolloutEngineConfig,
 )
@@ -57,6 +58,7 @@ class ExperimentSpec:
     rollout: RolloutEngineConfig = dataclasses.field(
         default_factory=RolloutEngineConfig
     )
+    env: EnvConfig = dataclasses.field(default_factory=EnvConfig)
     mesh_shape: Optional[Tuple[int, ...]] = None
     mesh_axes: Tuple[str, ...] = ("data", "model")
     prompts_per_iter: int = 8
@@ -82,6 +84,7 @@ class ExperimentSpec:
             "coordinator": dataclasses.asdict(self.coordinator),
             "async_pipeline": dataclasses.asdict(self.async_pipeline),
             "rollout": dataclasses.asdict(self.rollout),
+            "env": dataclasses.asdict(self.env),
             "mesh_shape": list(self.mesh_shape) if self.mesh_shape else None,
             "mesh_axes": list(self.mesh_axes),
             "prompts_per_iter": self.prompts_per_iter,
@@ -99,6 +102,7 @@ class ExperimentSpec:
             coordinator=DataCoordinatorConfig(**d.get("coordinator", {})),
             async_pipeline=AsyncPipelineConfig(**d.get("async_pipeline", {})),
             rollout=RolloutEngineConfig(**d.get("rollout", {})),
+            env=EnvConfig(**d.get("env", {})),
             mesh_shape=tuple(mesh_shape) if mesh_shape else None,
             mesh_axes=tuple(d.get("mesh_axes", ("data", "model"))),
             prompts_per_iter=d.get("prompts_per_iter", 8),
@@ -144,6 +148,7 @@ class ExperimentSpec:
             coordinator=self.coordinator,
             async_pipeline=self.async_pipeline,
             rollout=self.rollout,
+            env=self.env,
             registry=registry,
             algorithm=self.algorithm,
             seed=self.seed,

@@ -281,6 +281,50 @@ class RolloutEngineConfig:
 
 
 # --------------------------------------------------------------------------- #
+# Multi-turn agentic environments (beyond-paper: tool-use / dialog workloads
+# on the DistFlow DAG — repro.rl.envs, docs/environments.md).
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class EnvConfig:
+    """Flags for the environment/reward subsystem (``repro.rl.envs``).
+
+    ``name=""`` (default) disables the subsystem entirely: the DAG keeps its
+    (REWARD, COMPUTE) stage and the GENERATE path is bit-for-bit the pre-env
+    code. A named env swaps the reward node for an (ENV, COMPUTE) stage and
+    — when ``max_turns > 1`` — turns the continuous rollout engine's slot
+    loop into an episode loop: a sequence finishing a turn re-enters the
+    prompt queue with the env observation appended and its KV rows preserved
+    (only observation tokens are prefilled on later turns).
+    """
+
+    # registered environment name (repro.rl.envs: function_reward |
+    # calculator | dialog | anything added via register_env); "" = off
+    name: str = ""
+    # episode turn cap; the engine truncates episodes the env never ends
+    max_turns: int = 1
+    # per-turn response-token budget (0 = rl.max_new_tokens); multi-turn
+    # runs usually want this well under max_new_tokens
+    turn_budget: int = 0
+    # cap on observation tokens appended per turn (envs may return fewer)
+    obs_budget: int = 16
+    # registered RewardSpec the env (and the plain REWARD stage) scores with
+    reward: str = "math"
+
+    def __post_init__(self):
+        if self.max_turns < 1:
+            raise ValueError(f"max_turns must be >= 1, got {self.max_turns}")
+        if self.turn_budget < 0:
+            raise ValueError(
+                f"turn_budget must be >= 0, got {self.turn_budget}")
+        if self.obs_budget < 1:
+            raise ValueError(f"obs_budget must be >= 1, got {self.obs_budget}")
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.name)
+
+
+# --------------------------------------------------------------------------- #
 # Async off-policy pipeline v2 (beyond-paper: AsyncFlow / LlamaRL-style
 # staleness-bounded generation/training overlap on the DistFlow DAG).
 # --------------------------------------------------------------------------- #

@@ -22,6 +22,7 @@ class Role(str, enum.Enum):
     REWARD = "reward"
     REFERENCE = "reference"
     ADVANTAGE = "advantage"
+    ENV = "env"  # environment stage: episode rewards in place of REWARD
     DATA = "data"
 
 

@@ -26,6 +26,7 @@ from jax.sharding import Mesh
 from repro.configs.base import (
     AsyncPipelineConfig,
     DataCoordinatorConfig,
+    EnvConfig,
     ModelConfig,
     RolloutEngineConfig,
 )
@@ -43,7 +44,6 @@ from repro.data.dataset import SyntheticMathDataset
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import get_model
 from repro.rl import critic as critic_mod
-from repro.rl import reward as reward_mod
 from repro.rl import rollout as rollout_mod
 from repro.rl import trainer
 from repro.rl.trainer import RLConfig
@@ -67,13 +67,17 @@ def ppo_dag() -> DAG:
 
 # --------------------------------------------------------------------------- #
 def _build_engines(model, cfg: ModelConfig, rl: RLConfig, tok: ByteTokenizer,
-                   spec, rollout: Optional[RolloutEngineConfig] = None):
+                   spec, rollout: Optional[RolloutEngineConfig] = None,
+                   env_runtime=None):
     """Jitted engines for one algorithm spec. The advantage engine comes from
     ``spec.make_advantage``; critic engines exist iff the spec uses a critic.
     The GENERATE engine is either the jitted lockstep ``rollout.generate`` or
     the slot-refill :class:`~repro.rl.rollout_engine.ContinuousRolloutEngine`
     (``RolloutEngineConfig.engine == "continuous"``) — same call contract,
-    same RolloutResult."""
+    same RolloutResult. An ``env_runtime`` turns the continuous engine's slot
+    loop into the multi-turn episode loop (docs/environments.md)."""
+    from repro.rl import envs as envs_mod
+
     eng: Dict[str, Any] = {}
 
     def _generate(params, prompts, key):
@@ -86,6 +90,14 @@ def _build_engines(model, cfg: ModelConfig, rl: RLConfig, tok: ByteTokenizer,
     if rollout is not None and rollout.engine == "continuous":
         from repro.rl.rollout_engine import ContinuousRolloutEngine
 
+        env_kw = {}
+        if env_runtime is not None:
+            env_kw = dict(
+                env=env_runtime,
+                max_turns=env_runtime.cfg.max_turns,
+                turn_budget=env_runtime.cfg.turn_budget,
+                obs_budget=env_runtime.cfg.obs_budget,
+            )
         eng["generate"] = ContinuousRolloutEngine(
             model,
             max_new=rl.max_new_tokens,
@@ -96,14 +108,17 @@ def _build_engines(model, cfg: ModelConfig, rl: RLConfig, tok: ByteTokenizer,
             prefill_chunk=rollout.prefill_chunk,
             prefill_bucket=rollout.prefill_bucket,
             refill_threshold=rollout.refill_threshold,
+            **env_kw,
         )
     else:
         eng["generate"] = jax.jit(_generate)
     eng["logprobs"] = jax.jit(lambda p, t: model.logprobs(p, t))
+    # the REWARD stage's scorer is resolved from the reward registry (the
+    # default "math" is exactly the pre-registry math_reward_tokens path)
+    reward_name = env_runtime.cfg.reward if env_runtime is not None else "math"
+    token_fn = envs_mod.get_reward(reward_name).token_fn
     eng["reward"] = jax.jit(
-        lambda tokens, mask, answers: reward_mod.math_reward_tokens(
-            tokens, mask, answers, tok
-        )
+        lambda tokens, mask, answers: token_fn(tokens, mask, answers, tok)
     )
     eng["advantage"] = jax.jit(spec.make_advantage(rl))
     if spec.uses_critic:
@@ -143,11 +158,13 @@ def build_pipeline(
     coordinator: Optional[DataCoordinatorConfig] = None,
     async_pipeline: Optional[AsyncPipelineConfig] = None,
     rollout: Optional[RolloutEngineConfig] = None,
+    env: Optional[EnvConfig] = None,
     registry: Optional[Registry] = None,
     algorithm=None,
     seed: int = 0,
 ) -> Pipeline:
     from repro.rl import algorithms
+    from repro.rl import envs as envs_mod
 
     spec = algorithm or algorithms.get_algorithm(rl.algorithm)
     coordinator = coordinator or DataCoordinatorConfig()
@@ -159,6 +176,17 @@ def build_pipeline(
     assert cfg.vocab_size >= tok.vocab_size, "model vocab must cover the tokenizer"
     model = get_model(cfg)
 
+    env_runtime = None
+    if env is not None and env.enabled:
+        if env.max_turns > 1 and (rollout is None
+                                  or rollout.engine != "continuous"):
+            raise ValueError(
+                "multi-turn environments need the continuous rollout "
+                "engine's episode loop: set RolloutEngineConfig("
+                "engine='continuous') (single-turn envs run on either engine)"
+            )
+        env_runtime = envs_mod.EnvRuntime(envs_mod.get_env(env.name), env, tok)
+
     key = jax.random.PRNGKey(seed)
     k_actor, k_critic, k_run = jax.random.split(key, 3)
     actor_params = model.init(k_actor)
@@ -167,7 +195,8 @@ def build_pipeline(
     ctx = WorkerContext(
         mesh=mesh,
         rl=rl,
-        engines=_build_engines(model, cfg, rl, tok, spec, rollout),
+        engines=_build_engines(model, cfg, rl, tok, spec, rollout,
+                               env_runtime),
         dataloader=DistributedDataloader(
             dataset or SyntheticMathDataset(4096, seed=seed),
             mesh=mesh,
@@ -183,8 +212,13 @@ def build_pipeline(
     )
     if spec.uses_critic:
         ctx.critic_state = trainer.init_state(critic_mod.init(cfg, k_critic))
+    ctx.env = env_runtime
 
     dag = dag or spec.dag_factory()
+    if env_runtime is not None:
+        # retarget the reward node at the environment stage (the env writes
+        # the same `rewards` buffer key; validate_dag treats ENV as REWARD)
+        dag = envs_mod.with_env_stage(dag)
     spec.validate_dag(dag)
     plan = DAGPlanner().plan(dag)
     if centralized:

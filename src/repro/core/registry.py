@@ -75,6 +75,7 @@ def default_registry() -> Registry:
     r.register(Role.REFERENCE, NodeType.MODEL_INFERENCE, stages.reference_logprobs)
     r.register(Role.CRITIC, NodeType.MODEL_INFERENCE, stages.critic_values)
     r.register(Role.REWARD, NodeType.COMPUTE, stages.reward_compute)
+    r.register(Role.ENV, NodeType.COMPUTE, stages.env_compute)
     r.register(Role.ADVANTAGE, NodeType.COMPUTE, stages.advantage_compute)
     r.register(Role.ACTOR, NodeType.MODEL_TRAIN, stages.actor_train)
     r.register(Role.CRITIC, NodeType.MODEL_TRAIN, stages.critic_train)

@@ -60,6 +60,18 @@ def actor_generate(ctx, buffer, node: Node) -> Dict:
     buffer.put("response_mask", res.response_mask, model_spec)
     buffer.put("old_logprob", res.old_logprob, model_spec)
     buffer.put("answers", answers, model_spec)
+    if res.role_mask is not None:
+        # multi-turn episodes: per-token roles (0 prompt, 1 action, 2 env
+        # observation) so downstream masking can be audited; response_mask
+        # already excludes observation tokens
+        buffer.put("role_mask", res.role_mask, model_spec)
+    env_out = getattr(engine, "last_env", None)
+    if env_out:
+        # engine-driven episodes: env rewards/turns ride the buffer to the
+        # (ENV, COMPUTE) stage (they repack with the batch under the load
+        # balancer exactly like every other per-sequence key)
+        buffer.put("env_rewards", jnp.asarray(env_out["rewards"]), model_spec)
+        buffer.put("env_turns", jnp.asarray(env_out["turns"]), model_spec)
     gen_tokens = float(jnp.sum(res.lengths))
     ctx.counters["gen_tokens"] = ctx.counters.get("gen_tokens", 0.0) + gen_tokens
     out = {
@@ -110,6 +122,36 @@ def reward_compute(ctx, buffer, node: Node) -> Dict:
     rewards = ctx.engines["reward"](tokens, mask, answers)
     buffer.put("rewards", rewards, P(compute_spec[0]))
     return {"reward/mean": float(jnp.mean(rewards))}
+
+
+def env_compute(ctx, buffer, node: Node) -> Dict:
+    """(ENV, COMPUTE): episode rewards from the environment subsystem
+    (``repro.rl.envs``; replaces the REWARD stage when ``EnvConfig`` names an
+    env). Engine-driven multi-turn runs already stepped the envs during
+    generation — their rewards ride the buffer as ``env_rewards``; the
+    lockstep engine's single-turn path steps each episode post-hoc over the
+    finished rollout here."""
+    _, compute_spec = _specs(ctx)
+    seq_spec = P(compute_spec[0])
+    out: Dict[str, float] = {}
+    if "env_rewards" in buffer.keys():
+        rewards = buffer.get("env_rewards", seq_spec)
+        turns = buffer.get("env_turns", seq_spec)
+        out["env/turns_mean"] = float(jnp.mean(turns.astype(jnp.float32)))
+    else:
+        if ctx.env is None:
+            raise RuntimeError(
+                "env_compute needs WorkerContext.env (an EnvRuntime); "
+                "was the pipeline built with an enabled EnvConfig?"
+            )
+        tokens = buffer.get("tokens", compute_spec)
+        mask = buffer.get("response_mask", compute_spec)
+        rewards = jnp.asarray(ctx.env.score_single_turn(
+            np.asarray(jax.device_get(tokens)),
+            np.asarray(jax.device_get(mask))))
+    buffer.put("rewards", rewards, seq_spec)
+    out["reward/mean"] = float(jnp.mean(rewards))
+    return out
 
 
 def advantage_compute(ctx, buffer, node: Node) -> Dict:

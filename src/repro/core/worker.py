@@ -46,6 +46,10 @@ class WorkerContext:
     # the prompt iterator the GENERATE stage pulls from (bound by the worker
     # at init — see PromptSource); None falls back to ctx.dataloader directly
     prompt_source: Any = None
+    # the bound environment runtime (repro.rl.envs.EnvRuntime) when an
+    # EnvConfig is enabled; the (ENV, COMPUTE) stage and the rollout
+    # engine's episode loop both read it. None = pre-env reward path.
+    env: Any = None
     counters: Dict[str, float] = field(default_factory=dict)
 
     def next_key(self):

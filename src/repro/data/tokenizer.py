@@ -27,7 +27,9 @@ class ByteTokenizer:
         for i in np.asarray(ids).tolist():
             if i == self.EOS:
                 break
-            if i >= self.SPECIALS:
+            # skip non-byte ids: specials other than EOS, and ids a model
+            # with vocab_size > 259 may sample from its padded tail
+            if self.SPECIALS <= i < 256 + self.SPECIALS:
                 out.append(i - self.SPECIALS)
         return out.decode("utf-8", errors="replace")
 

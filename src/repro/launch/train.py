@@ -26,6 +26,7 @@ import time
 from repro.api import ExperimentSpec
 from repro.configs import (
     AsyncPipelineConfig,
+    EnvConfig,
     RolloutEngineConfig,
     get_config,
     reduced,
@@ -77,11 +78,20 @@ def build_experiment(args) -> ExperimentSpec:
         rollout = RolloutEngineConfig(
             engine="continuous", num_slots=args.rollout_slots
         )
+    env = EnvConfig()
+    if args.env:
+        env = EnvConfig(name=args.env, max_turns=args.max_turns,
+                        turn_budget=args.turn_budget)
+        if env.max_turns > 1 and rollout.engine != "continuous":
+            # the episode loop lives in the continuous engine; default the
+            # slot pool to one slot per sequence unless --rollout-slots set
+            rollout = RolloutEngineConfig(engine="continuous", num_slots=0)
     return ExperimentSpec(
         model=cfg,
         rl=rl,
         async_pipeline=async_pipeline,
         rollout=rollout,
+        env=env,
         prompts_per_iter=args.prompts_per_iter,
         centralized=args.centralized_baseline,
         seed=args.seed,
@@ -111,6 +121,16 @@ def main(argv=None) -> None:
                     help="enable the continuous-batching rollout engine "
                          "with this many decode slots (0 = one per "
                          "sequence; see docs/rollout_engine.md)")
+    ap.add_argument("--env", default=None,
+                    help="registered environment name (repro.rl.envs: "
+                         "function_reward | calculator | dialog); enables "
+                         "the env/reward subsystem (docs/environments.md)")
+    ap.add_argument("--max-turns", type=int, default=1,
+                    help="episode turn cap for --env (>1 auto-enables the "
+                         "continuous rollout engine's episode loop)")
+    ap.add_argument("--turn-budget", type=int, default=0,
+                    help="per-turn response-token cap for --env "
+                         "(0 = --max-new-tokens)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced model config (CPU-sized)")
     ap.add_argument("--seed", type=int, default=0)

@@ -150,6 +150,10 @@ class AlgorithmSpec:
         """Raise :class:`DAGError` if ``dag`` lacks a role this algorithm
         requires (e.g. a PPO run on a DAG without a critic node)."""
         have = {n.role for n in dag.nodes.values()}
+        if Role.ENV in have:
+            # an environment stage writes the same `rewards` buffer key the
+            # REWARD stage would (repro.rl.envs.with_env_stage)
+            have.add(Role.REWARD)
         missing = self.required_roles - have
         if missing:
             raise DAGError(

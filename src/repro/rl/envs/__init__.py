@@ -1,0 +1,40 @@
+"""Multi-turn agentic environments + pluggable rewards (docs/environments.md).
+
+Importing the package registers the built-ins: envs ``function_reward`` /
+``calculator`` / ``dialog`` and reward ``math``.
+"""
+from repro.rl.envs.base import (
+    Environment,
+    EnvRuntime,
+    EnvSpec,
+    RewardSpec,
+    get_env,
+    get_reward,
+    list_envs,
+    list_rewards,
+    register_env,
+    register_reward,
+    with_env_stage,
+)
+from repro.rl.envs.builtin import (
+    CalculatorToolEnv,
+    FunctionRewardEnv,
+    MultiTurnDialogEnv,
+)
+
+__all__ = [
+    "Environment",
+    "EnvRuntime",
+    "EnvSpec",
+    "RewardSpec",
+    "get_env",
+    "get_reward",
+    "list_envs",
+    "list_rewards",
+    "register_env",
+    "register_reward",
+    "with_env_stage",
+    "CalculatorToolEnv",
+    "FunctionRewardEnv",
+    "MultiTurnDialogEnv",
+]

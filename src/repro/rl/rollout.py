@@ -26,6 +26,12 @@ class RolloutResult(NamedTuple):
     response_mask: jax.Array  # (B, Lp + T) 1 on counted response tokens
     old_logprob: jax.Array  # (B, Lp + T) behaviour logprobs (0 on prompt)
     lengths: jax.Array  # (B,) response lengths
+    # per-token roles for multi-turn episodes (repro.rl.envs): 0 = prompt /
+    # pad, 1 = model action, 2 = environment observation. None on the
+    # single-turn paths (every non-prompt token is an action there);
+    # response_mask == (role_mask == 1) whenever role_mask is present, so
+    # losses/advantages already exclude observation tokens.
+    role_mask: Optional[jax.Array] = None
 
 
 def sample_token(logits: jax.Array, key, temperature: float) -> jax.Array:

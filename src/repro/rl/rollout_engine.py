@@ -1,5 +1,5 @@
 """Continuous-batching rollout engine: slot-refill generation for the
-GENERATE stage.
+GENERATE stage, with a multi-turn episode loop for agentic environments.
 
 The lockstep path (:func:`repro.rl.rollout.generate`) pads every prompt to a
 common length and scans all ``max_new`` decode steps even after every
@@ -25,6 +25,19 @@ is that fix on the DistFlow GENERATE stage:
     once the prompt queue drains — the engine never pays lockstep's
     "scan to max_new regardless" tax.
 
+Multi-turn episodes (``env=`` an :class:`repro.rl.envs.EnvRuntime`): a slot
+whose sequence finishes a *turn* hands its response to the environment; if
+the episode continues, it **re-enters the PromptQueue** as a continuation
+item carrying its saved KV rows (``lm.gather_cache_rows``) and the feed
+tokens ``[last response token] + observation``. When the continuation is
+scheduled, the rows are scattered back over a free slot's arena rows
+(``lm.scatter_cache_rows``) and ONLY the feed tokens are run through the
+decode path — the shared prompt/response prefix is never re-prefilled, so
+``last_stats["prefill_tokens_turn2plus"]`` counts observation tokens (plus
+one carried response token per turn), not prefixes. Observation tokens are
+excluded from ``response_mask`` and tagged 2 in the emitted ``role_mask``,
+so losses/advantages never train on env tokens (docs/environments.md).
+
 Determinism / equivalence contract: under a *fixed slot schedule* — one
 length bucket, ``num_slots >= batch`` (every prompt prefilled at once, no
 mid-stream refill) — the engine consumes the exact key schedule of lockstep
@@ -33,11 +46,13 @@ decode steps) and computes the same prefill/decode math on the same shapes,
 so it is token-for-token identical to lockstep (asserted by
 ``tests/test_rollout_engine.py``). Decode steps past ``max_new - 1`` (which
 only exist once refill has happened) derive keys by ``fold_in(k2, t)``.
+Single-turn runs — env off, or a single-turn env, which only scores — take
+this exact path (asserted by ``tests/test_envs.py``).
 
 Metrics (``engine.last_stats``, surfaced by the GENERATE stage as
 ``rollout/*``): tokens/sec, padding-waste %, slot occupancy, decode steps,
-refill counts. ``docs/rollout_engine.md`` has the slot lifecycle diagram and
-the metrics glossary.
+refill counts, per-turn prefill token accounting. ``docs/rollout_engine.md``
+has the slot lifecycle diagram and the metrics glossary.
 """
 from __future__ import annotations
 
@@ -62,14 +77,35 @@ def _true_lengths(prompts: np.ndarray, pad_id: int) -> np.ndarray:
     return np.where(nonpad.any(axis=1), last, 1).astype(np.int64)
 
 
-class PromptQueue:
-    """Length-bucketed FIFO over one iteration's prompts.
+class _Continuation:
+    """A continuing episode waiting for a slot: the dataset row, the feed
+    tokens (last response token + clipped observation), the saved KV rows,
+    and the cache offset the feed starts at."""
 
-    Each prompt's true (non-pad) length is rounded up to a multiple of
-    ``bucket`` (0 = a single bucket at the batch's padded length — the
-    lockstep-equivalent schedule); refills pop from one bucket at a time so
-    every prefill batch shares a padded length. Within a bucket, dataset
-    order is preserved.
+    __slots__ = ("row", "feed", "cache_rows", "cache_len")
+
+    def __init__(self, row: int, feed: np.ndarray, cache_rows, cache_len: int):
+        self.row = row
+        self.feed = np.asarray(feed, np.int32)
+        self.cache_rows = cache_rows
+        self.cache_len = int(cache_len)
+
+
+class PromptQueue:
+    """Length-bucketed FIFO over one iteration's pending work.
+
+    Fresh prompts: each prompt's true (non-pad) length is rounded up to a
+    multiple of ``bucket`` (0 = a single bucket at the batch's padded
+    length — the lockstep-equivalent schedule); refills pop from one bucket
+    at a time so every prefill batch shares a padded length. Within a
+    bucket, dataset order is preserved.
+
+    Continuations (:meth:`push`): continuing episodes re-enter the queue in
+    exact-feed-length buckets (a continuation batch must share its feed
+    width; feeds are short — an observation plus one carried token — so the
+    bucket count stays small). ``pop_work`` serves continuations first:
+    finishing in-flight episodes bounds the number of saved KV-row sets
+    held off-arena.
     """
 
     def __init__(self, prompts: np.ndarray, *, pad_id: int, bucket: int = 0,
@@ -83,21 +119,69 @@ class PromptQueue:
             blens = np.minimum(-(-self.true_len // bucket) * bucket, Lp)
         self.bucket_len = blens
         self._buckets: Dict[int, deque] = {}
+        self._cont: Dict[int, deque] = {}
         for i in (range(B) if order is None else order):
             self._buckets.setdefault(int(blens[i]), deque()).append(i)
 
     def __len__(self) -> int:
-        return sum(len(q) for q in self._buckets.values())
+        return (sum(len(q) for q in self._buckets.values())
+                + sum(len(q) for q in self._cont.values()))
+
+    def push(self, cont: _Continuation) -> None:
+        """Re-enqueue a continuing episode (multi-turn env path)."""
+        self._cont.setdefault(len(cont.feed), deque()).append(cont)
 
     def pop(self, n: int) -> Tuple[int, List[int]]:
-        """Pop up to ``n`` prompt indices from the fullest bucket (ties break
-        toward the shorter bucket length). Returns (bucket_len, indices)."""
+        """Pop up to ``n`` fresh-prompt indices from the fullest bucket (ties
+        break toward the shorter bucket length). Returns (bucket_len,
+        indices)."""
         lb = max(self._buckets, key=lambda b: (len(self._buckets[b]), -b))
         q = self._buckets[lb]
         take = [q.popleft() for _ in range(min(n, len(q)))]
         if not q:
             del self._buckets[lb]
         return lb, take
+
+    def pop_work(self, n: int):
+        """Pop up to ``n`` homogeneous work items: ``("cont", feed_len,
+        [_Continuation, ...])`` when continuations pend (fullest feed-length
+        bucket first), else ``("prefill", bucket_len, [row, ...])``. With no
+        continuations this is exactly :meth:`pop` — the single-turn refill
+        schedule is untouched."""
+        if self._cont:
+            K = max(self._cont, key=lambda k: (len(self._cont[k]), -k))
+            q = self._cont[K]
+            take = [q.popleft() for _ in range(min(n, len(q)))]
+            if not q:
+                del self._cont[K]
+            return "cont", K, take
+        lb, idxs = self.pop(n)
+        return "prefill", lb, idxs
+
+
+class _Episode:
+    """Host-side record of one multi-turn episode (dataset row)."""
+
+    __slots__ = ("env", "toks", "roles", "lps", "reward", "turn", "infos")
+
+    def __init__(self, env):
+        self.env = env
+        self.toks: List[int] = []   # tokens after the prompt region
+        self.roles: List[int] = []  # 1 = action, 2 = observation
+        self.lps: List[float] = []  # behaviour logprobs (0 on observations)
+        self.reward = 0.0
+        self.turn = 0
+        self.infos: List[dict] = []
+
+    def record_turn(self, resp: np.ndarray, lps: np.ndarray) -> None:
+        self.toks.extend(int(t) for t in resp)
+        self.roles.extend([1] * len(resp))
+        self.lps.extend(float(v) for v in lps)
+
+    def record_obs(self, obs: np.ndarray) -> None:
+        self.toks.extend(int(t) for t in obs)
+        self.roles.extend([2] * len(obs))
+        self.lps.extend([0.0] * len(obs))
 
 
 class ContinuousRolloutEngine:
@@ -106,9 +190,16 @@ class ContinuousRolloutEngine:
     Drop-in for the jitted lockstep engine at the GENERATE stage: callable as
     ``engine(params, prompts, key) -> RolloutResult`` with identical output
     contract (tokens / response_mask / old_logprob / lengths in dataset
-    order). Host code orchestrates slot bookkeeping; the two hot paths — the
-    per-bucket refill prefill and the early-exiting decode burst — are jitted
-    once per shape and reused across iterations.
+    order). Host code orchestrates slot bookkeeping; the three hot paths —
+    the per-bucket refill prefill, the continuation feed, and the
+    early-exiting decode burst — are jitted once per shape and reused across
+    iterations.
+
+    ``env`` (an :class:`repro.rl.envs.EnvRuntime`) switches the slot loop to
+    the episode loop: one environment per sequence, up to ``max_turns``
+    turns, observations appended via KV-preserving continuations. With
+    ``env=None`` (default) the engine is the PR-4 single-turn engine,
+    token-for-token.
     """
 
     def __init__(
@@ -123,6 +214,10 @@ class ContinuousRolloutEngine:
         prefill_chunk: int = 0,
         prefill_bucket: int = 0,
         refill_threshold: int = 1,
+        env=None,
+        max_turns: int = 1,
+        turn_budget: int = 0,
+        obs_budget: int = 16,
     ):
         if model.is_encdec or model.cfg.num_prefix_embeds:
             raise ValueError(
@@ -142,6 +237,26 @@ class ContinuousRolloutEngine:
         # host round-trips — useful when dispatch overhead is comparable to
         # a decode step, as on CPU hosts
         self.refill_threshold = max(1, refill_threshold)
+        # multi-turn episode loop (None = single-turn slot loop)
+        self.env = env
+        self.max_turns = max(1, max_turns)
+        if env is not None and self.max_turns > 1 and any(
+                k[0] == "ssm" for k in model.cfg.layer_kinds()):
+            # a done slot keeps executing decode steps (fed PAD) until the
+            # burst exits; attention tolerates that — the garbage KV sits
+            # past the valid cache_len and is sequentially overwritten
+            # before it can be attended — but SSM recurrent state absorbs
+            # every update irreversibly, so the rows saved at turn end
+            # would resume the next turn from a corrupted state
+            raise ValueError(
+                "multi-turn environments support attention-only archs; "
+                f"{model.cfg.name!r} has SSM mixer layers whose recurrent "
+                "state cannot be preserved across turns (use max_turns=1 "
+                "or an attention arch)"
+            )
+        # per-turn response cap (0 = max_new); observation clip per turn
+        self.turn_budget = min(turn_budget, max_new) if turn_budget else max_new
+        self.obs_budget = max(1, obs_budget)
         # chunked prefill is attention-only (SSM state doesn't carry between
         # chunks), needs an unwrapped cache (no SWA ring), and excludes
         # int8 caches: a chunk would attend the quantize->dequantized K/V
@@ -156,12 +271,42 @@ class ContinuousRolloutEngine:
         )
         self.prefill_chunk = prefill_chunk if self._can_chunk else 0
         self.last_stats: Dict[str, float] = {}
+        # per-episode env outputs of the last call (None when env is off):
+        # {"rewards": (B,), "turns": (B,), "tool_calls": int}
+        self.last_env: Optional[Dict[str, np.ndarray]] = None
         self._refill_jit: Dict[Tuple[int, int, int], callable] = {}
         self._burst_jit: Dict[Tuple[int, int], callable] = {}
+        self._cont_jit: Dict[Tuple[int, int, int], callable] = {}
 
     # ------------------------------------------------------------------ #
     # jitted halves
     # ------------------------------------------------------------------ #
+    def _seed_slots(self, R, logits, key, slots, lane_budget, new_len,
+                    cur_tok, cache_len, resp_len, done, budget,
+                    out_tok, out_lp):
+        """Shared epilogue of the refill and continuation closures (traced
+        inside their jits): sample each lane's first response token from
+        ``logits``, reset the per-slot output rows, and scatter the lane
+        state into the slot arrays (out-of-range slot ids = padding lanes,
+        dropped). ``new_len`` is the lanes' cache length after the fill — a
+        scalar bucket width for refills, a per-lane vector for
+        continuations."""
+        eos, pad, max_new = self.eos_id, self.pad_id, self.max_new
+        tok0 = sample_token(logits, key, self.temperature)
+        lane = jnp.arange(R)
+        lp0 = jax.nn.log_softmax(logits, axis=-1)[lane, tok0]
+        done0 = (tok0 == eos) if eos is not None else jnp.zeros((R,), bool)
+        row_tok = jnp.full((R, max_new), pad, out_tok.dtype).at[:, 0].set(tok0)
+        row_lp = jnp.zeros((R, max_new), out_lp.dtype).at[:, 0].set(lp0)
+        cur_tok = cur_tok.at[slots].set(tok0, mode="drop")
+        cache_len = cache_len.at[slots].set(new_len, mode="drop")
+        resp_len = resp_len.at[slots].set(1, mode="drop")
+        done = done.at[slots].set(done0 | (lane_budget <= 1), mode="drop")
+        budget = budget.at[slots].set(lane_budget, mode="drop")
+        out_tok = out_tok.at[slots].set(row_tok, mode="drop")
+        out_lp = out_lp.at[slots].set(row_lp, mode="drop")
+        return cur_tok, cache_len, resp_len, done, budget, out_tok, out_lp
+
     def _make_refill(self, R: int, Lb: int, smax: int):
         """Refill ``R`` lanes with a (padded) prompt batch of width ``Lb``:
         prefill, scatter the fresh cache rows over the arena at ``slots``
@@ -170,8 +315,7 @@ class ContinuousRolloutEngine:
         refill batch width — the caller rounds the actual refill count up to
         a power of two so late-stream single-slot refills don't pay a
         full-pool prefill (and the compile count stays log-bounded)."""
-        model, temp = self.model, self.temperature
-        eos, pad, max_new = self.eos_id, self.pad_id, self.max_new
+        model = self.model
         chunk = self.prefill_chunk
 
         def refill(params, caches, prompts, slots, lane_budget, key,
@@ -187,24 +331,47 @@ class ContinuousRolloutEngine:
             else:
                 logits, rows, _ = model.prefill(params, prompts, smax=smax)
             caches = model.scatter_cache_rows(caches, rows, slots)
-            tok0 = sample_token(logits, key, temp)
-            lane = jnp.arange(R)
-            lp0 = jax.nn.log_softmax(logits, axis=-1)[lane, tok0]
-            done0 = (tok0 == eos) if eos is not None else jnp.zeros((R,), bool)
-            row_tok = jnp.full((R, max_new), pad, out_tok.dtype).at[:, 0].set(tok0)
-            row_lp = jnp.zeros((R, max_new), out_lp.dtype).at[:, 0].set(lp0)
-            cur_tok = cur_tok.at[slots].set(tok0, mode="drop")
-            cache_len = cache_len.at[slots].set(Lb, mode="drop")
-            resp_len = resp_len.at[slots].set(1, mode="drop")
-            done = done.at[slots].set(
-                done0 | (lane_budget <= 1), mode="drop")
-            budget = budget.at[slots].set(lane_budget, mode="drop")
-            out_tok = out_tok.at[slots].set(row_tok, mode="drop")
-            out_lp = out_lp.at[slots].set(row_lp, mode="drop")
+            (cur_tok, cache_len, resp_len, done, budget, out_tok,
+             out_lp) = self._seed_slots(
+                R, logits, key, slots, lane_budget, Lb,
+                cur_tok, cache_len, resp_len, done, budget, out_tok, out_lp)
             return (caches, cur_tok, cache_len, resp_len, done, budget,
                     out_tok, out_lp)
 
         return jax.jit(refill)
+
+    def _make_continue(self, R: int, K: int, smax: int):
+        """Resume ``R`` continuing episodes on free slots: scatter each
+        episode's saved KV rows over the arena at ``slots``, teacher-force
+        the ``K`` feed tokens (last response token + observation) through the
+        decode path — per-row cache offsets differ, which
+        ``model.decode_step`` already supports — and sample each lane's
+        first next-turn token from the final feed position's logits. Only
+        the feed is processed: the shared prompt/response prefix is reused
+        from the saved rows, never re-prefilled."""
+        model = self.model
+        V = model.cfg.padded_vocab
+
+        def cont(params, caches, rows, slots, feed, start_len, lane_budget,
+                 key, cur_tok, cache_len, resp_len, done, budget,
+                 out_tok, out_lp):
+            def body(carry, tok):
+                rows, clen, _ = carry
+                logits, rows, clen = model.decode_step(params, tok, rows, clen)
+                return (rows, clen, logits), None
+
+            init = (rows, start_len, jnp.zeros((R, V), jnp.float32))
+            (rows, clen, logits), _ = jax.lax.scan(
+                body, init, jnp.moveaxis(feed, 1, 0))
+            caches = model.scatter_cache_rows(caches, rows, slots)
+            (cur_tok, cache_len, resp_len, done, budget, out_tok,
+             out_lp) = self._seed_slots(
+                R, logits, key, slots, lane_budget, clen,
+                cur_tok, cache_len, resp_len, done, budget, out_tok, out_lp)
+            return (caches, cur_tok, cache_len, resp_len, done, budget,
+                    out_tok, out_lp)
+
+        return jax.jit(cont)
 
     def _make_burst(self, S: int):
         """The decode loop: a ``lax.while_loop`` stepping every slot, exiting
@@ -267,24 +434,69 @@ class ContinuousRolloutEngine:
         return jax.jit(burst)
 
     # ------------------------------------------------------------------ #
+    @staticmethod
+    def _stack_cont_rows(items: List[_Continuation], R: int):
+        """Stack the saved per-episode cache rows (leaves (N, 1, ...)) into
+        an (N, R, ...) tree, zero-padding the unused lanes."""
+        stacked = jax.tree.map(
+            lambda *leaves: jnp.concatenate(leaves, axis=1),
+            *[c.cache_rows for c in items])
+        pad_n = R - len(items)
+        if pad_n:
+            stacked = jax.tree.map(
+                lambda a: jnp.pad(
+                    a, [(0, 0), (0, pad_n)] + [(0, 0)] * (a.ndim - 2)),
+                stacked)
+        return stacked
+
+    # ------------------------------------------------------------------ #
     def __call__(self, params, prompts, key,
                  budgets: Optional[np.ndarray] = None) -> RolloutResult:
         """``budgets`` (B,) caps each sequence's response length at
         ``min(budgets[b], max_new)`` — same semantics as lockstep
         ``generate(budgets=...)``, but here a capped sequence *frees its
-        slot* instead of padding out the scan."""
+        slot* instead of padding out the scan. Under an env, the cap applies
+        per turn (jointly with ``turn_budget``)."""
         t_start = time.perf_counter()
         prompts_np = np.asarray(jax.device_get(prompts), np.int32)
         B, Lp = prompts_np.shape
         max_new = self.max_new
+        env_on = self.env is not None
+        max_turns = self.max_turns if env_on else 1
+        turn_cap = min(self.turn_budget, max_new) if env_on else max_new
         if budgets is None:
-            budgets_np = np.full(B, max_new, np.int32)
+            budgets_np = np.full(B, turn_cap, np.int32)
         else:
             budgets_np = np.clip(
-                np.asarray(jax.device_get(budgets), np.int32), 1, max_new)
+                np.asarray(jax.device_get(budgets), np.int32), 1, turn_cap)
         S = self.num_slots if self.num_slots > 0 else B
         S = max(1, min(S, B))
-        smax = Lp + max_new
+        # the arena must hold the longest possible episode: prompt + every
+        # turn's response + every inter-turn feed (observation + 1 carried
+        # response token)
+        smax = Lp + max_turns * max_new + (max_turns - 1) * (self.obs_budget + 1)
+
+        # episode setup: one env per dataset row; reset() supplies the
+        # turn-1 context (built-ins return the prompt unchanged, so the
+        # single-turn schedule — and its tokens — are untouched)
+        episodes: List[Optional[_Episode]] = [None] * B
+        if env_on:
+            true0 = _true_lengths(prompts_np, self.pad_id)
+            first_rows = np.full((B, Lp), self.pad_id, np.int32)
+            for b in range(B):
+                ep = _Episode(self.env.make_episode())
+                obs0 = np.asarray(
+                    ep.env.reset(prompts_np[b, : true0[b]]), np.int32).ravel()
+                if len(obs0) > Lp:
+                    raise ValueError(
+                        f"env reset() returned {len(obs0)} tokens > prompt "
+                        f"width {Lp}")
+                first_rows[b, : len(obs0)] = obs0
+                episodes[b] = ep
+            queue_rows = first_rows
+        else:
+            queue_rows = prompts_np
+
         # known budgets + a real queue (S < B) -> longest-first (LPT) slot
         # packing: long sequences start first instead of draining alone at
         # the tail (the same policy as the coordinator's length-aware
@@ -292,7 +504,7 @@ class ContinuousRolloutEngine:
         # kept — that's the lockstep-equivalent fixed schedule.
         order = (np.argsort(-budgets_np, kind="stable")
                  if budgets is not None and S < B else None)
-        queue = PromptQueue(prompts_np, pad_id=self.pad_id,
+        queue = PromptQueue(queue_rows, pad_id=self.pad_id,
                             bucket=self.prefill_bucket, order=order)
         prefill_true_tokens = int(queue.true_len.sum())
 
@@ -315,11 +527,17 @@ class ContinuousRolloutEngine:
 
         # host bookkeeping ------------------------------------------------ #
         slot_seq = np.full(S, -1, np.int64)  # dataset row held by each slot
+        row_cache_pos = np.zeros(B, np.int64)  # cache offset per episode
         res_tok = np.full((B, max_new), self.pad_id, np.int32)
         res_lp = np.zeros((B, max_new), np.float32)
         res_len = np.zeros((B,), np.int32)
         completed = 0
         refills = 0
+        cont_refills = 0
+        cont_feed_tokens = 0
+        obs_tokens = 0
+        total_turns = 0
+        tool_calls = 0
         prefill_lane_tokens = 0
         bursts = 0
 
@@ -331,64 +549,148 @@ class ContinuousRolloutEngine:
             # one bundled host sync per visit: flush state for every slot
             done_h, resp_len_h, out_tok_h, out_lp_h = jax.device_get(
                 (done, resp_len, out_tok, out_lp))
-            # flush finished slots into the per-sequence results
+            # flush finished slots: single-turn -> results; env -> step the
+            # episode and either finalize or re-enqueue a continuation
+            # (KV rows for every continuing slot are gathered in ONE device
+            # call after the loop, then sliced per episode)
+            pending_conts: List[Tuple[int, int, np.ndarray]] = []
             for s in range(S):
-                if done_h[s] and slot_seq[s] >= 0:
-                    row = slot_seq[s]
+                if not (done_h[s] and slot_seq[s] >= 0):
+                    continue
+                row = slot_seq[s]
+                slot_seq[s] = -1
+                if not env_on:
                     res_tok[row] = out_tok_h[s]
                     res_lp[row] = out_lp_h[s]
                     res_len[row] = resp_len_h[s]
-                    slot_seq[s] = -1
                     completed += 1
+                    continue
+                ep = episodes[row]
+                n = int(resp_len_h[s])
+                rtoks = out_tok_h[s, :n].copy()
+                ep.record_turn(rtoks, out_lp_h[s, :n])
+                row_cache_pos[row] += n - 1  # decode steps this turn
+                obs, r, ep_done, info = ep.env.step(rtoks)
+                ep.reward += float(r)
+                ep.turn += 1
+                ep.infos.append(info or {})
+                total_turns += 1
+                if info and info.get("tool_call"):
+                    tool_calls += 1
+                if ep_done or ep.turn >= max_turns:
+                    completed += 1
+                    continue
+                obs = np.asarray(obs, np.int32).ravel()[: self.obs_budget]
+                ep.record_obs(obs)
+                # the last response token's KV was never written (it was
+                # sampled, not fed), so it leads the feed; the saved rows
+                # carry the whole shared prefix — nothing is re-prefilled
+                feed = np.concatenate([rtoks[-1:], obs])
+                pending_conts.append((s, row, feed))
+                cont_feed_tokens += len(feed)
+                obs_tokens += len(obs)
+            if pending_conts:
+                gathered = self.model.gather_cache_rows(
+                    caches,
+                    jnp.asarray([s for s, _, _ in pending_conts], jnp.int32))
+                for j, (s, row, feed) in enumerate(pending_conts):
+                    saved = jax.tree.map(
+                        lambda a, j=j: a[:, j:j + 1], gathered)
+                    queue.push(_Continuation(
+                        row, feed, saved, row_cache_pos[row]))
+                    row_cache_pos[row] += len(feed)
             if completed >= B:
                 break
-            # refill every free slot, one jitted prefill per length bucket
+            # refill every free slot, one jitted call per homogeneous batch
+            # (continuations first, then fresh-prompt length buckets)
             free = [s for s in range(S) if slot_seq[s] < 0]
             while free and len(queue):
-                lb, idxs = queue.pop(len(free))
-                lanes, free = free[: len(idxs)], free[len(idxs):]
-                # pad the refill batch to the next power of two (capped at
-                # the pool size), not the full pool: a late-stream
-                # single-slot refill prefills 1 lane, not num_slots — and a
-                # full-pool fill keeps the exact pool shape, which is what
-                # the lockstep-equivalence schedule runs
+                kind, L, items = queue.pop_work(len(free))
+                lanes, free = free[: len(items)], free[len(items):]
+                # pad the batch to the next power of two (capped at the
+                # pool size), not the full pool: a late-stream single-slot
+                # refill runs 1 lane, not num_slots — and a full-pool fill
+                # keeps the exact pool shape, which is what the lockstep-
+                # equivalence schedule runs
                 R = 1
-                while R < len(idxs):
+                while R < len(items):
                     R *= 2
                 R = min(R, S)
-                batch = np.zeros((R, lb), np.int32)
-                batch[: len(idxs)] = prompts_np[idxs][:, :lb]
                 slots_arr = jnp.asarray(
                     np.concatenate([lanes, np.full(R - len(lanes), S)])
                     .astype(np.int32)
                 )
                 lane_budget = np.full(R, max_new, np.int32)
-                lane_budget[: len(idxs)] = budgets_np[idxs]
-                rk = k0 if refills == 0 else jax.random.fold_in(k0, refills)
-                rf = self._refill_jit.get((R, lb, smax))
-                if rf is None:
-                    rf = self._refill_jit[(R, lb, smax)] = self._make_refill(
-                        R, lb, smax)
-                (caches, cur_tok, cache_len, resp_len, done, budget,
-                 out_tok, out_lp) = rf(
-                    params, caches, jnp.asarray(batch), slots_arr,
-                    jnp.asarray(lane_budget), rk,
-                    cur_tok, cache_len, resp_len, done, budget,
-                    out_tok, out_lp,
-                )
-                for lane, seq in zip(lanes, idxs):
-                    slot_seq[lane] = seq
-                refills += 1
-                # count the lanes the prefill actually executed (incl. the
-                # pow2 padding lanes) so prefill_waste reflects real compute
-                prefill_lane_tokens += R * lb
+                if kind == "prefill":
+                    idxs = items
+                    batch = np.zeros((R, L), np.int32)
+                    batch[: len(idxs)] = queue.prompts[idxs][:, :L]
+                    lane_budget[: len(idxs)] = budgets_np[idxs]
+                    rk = (k0 if refills == 0
+                          else jax.random.fold_in(k0, refills))
+                    rf = self._refill_jit.get((R, L, smax))
+                    if rf is None:
+                        rf = self._refill_jit[(R, L, smax)] = \
+                            self._make_refill(R, L, smax)
+                    (caches, cur_tok, cache_len, resp_len, done, budget,
+                     out_tok, out_lp) = rf(
+                        params, caches, jnp.asarray(batch), slots_arr,
+                        jnp.asarray(lane_budget), rk,
+                        cur_tok, cache_len, resp_len, done, budget,
+                        out_tok, out_lp,
+                    )
+                    for lane, seq in zip(lanes, idxs):
+                        slot_seq[lane] = seq
+                        row_cache_pos[seq] = L
+                    refills += 1
+                    # count the lanes the prefill actually executed (incl.
+                    # the pow2 padding lanes) so prefill_waste reflects
+                    # real compute
+                    prefill_lane_tokens += R * L
+                else:  # continuation: feed tokens only, saved KV reused
+                    feed = np.zeros((R, L), np.int32)
+                    start_len = np.zeros(R, np.int64)
+                    for j, c in enumerate(items):
+                        feed[j] = c.feed
+                        start_len[j] = c.cache_len
+                        lane_budget[j] = budgets_np[c.row]
+                    rows = self._stack_cont_rows(items, R)
+                    ck = jax.random.fold_in(k0, 1_000_000 + cont_refills)
+                    cf = self._cont_jit.get((R, L, smax))
+                    if cf is None:
+                        cf = self._cont_jit[(R, L, smax)] = \
+                            self._make_continue(R, L, smax)
+                    (caches, cur_tok, cache_len, resp_len, done, budget,
+                     out_tok, out_lp) = cf(
+                        params, caches, rows, slots_arr, jnp.asarray(feed),
+                        jnp.asarray(start_len.astype(np.int32)),
+                        jnp.asarray(lane_budget), ck,
+                        cur_tok, cache_len, resp_len, done, budget,
+                        out_tok, out_lp,
+                    )
+                    for lane, c in zip(lanes, items):
+                        slot_seq[lane] = c.row
+                    cont_refills += 1
             if not any(slot_seq[s] >= 0 for s in range(S)):
                 break  # queue drained and nothing in flight
             # a lane refilled immediately-done (EOS at its first token /
             # budget 1) is counted in the burst's n_done_entry, so the loop
             # below won't mistake it for a fresh completion; it flushes on
-            # the next visit
-            has_pending = jnp.asarray(len(queue) > 0)
+            # the next visit.
+            # "pending" must also count in-flight episodes that may re-enter
+            # the queue as continuations — otherwise a drained fresh-prompt
+            # queue would hold every finished slot at a global barrier until
+            # the slowest turn completes (lockstep turns, zero overlap).
+            # Conservative: an episode below its turn cap counts as pending
+            # even if its env ends up finishing it (costs one extra host
+            # visit). Single-turn runs (env off or max_turns == 1) never
+            # have such episodes, so their burst schedule is untouched.
+            cont_possible = env_on and max_turns > 1 and any(
+                slot_seq[s] >= 0
+                and episodes[slot_seq[s]].turn + 1 < max_turns
+                for s in range(S)
+            )
+            has_pending = jnp.asarray(len(queue) > 0 or cont_possible)
             (caches, cur_tok, cache_len, resp_len, done, budget,
              out_tok, out_lp, t, occ) = burst(
                 params, caches, cur_tok, cache_len, resp_len, done, budget,
@@ -397,18 +699,48 @@ class ContinuousRolloutEngine:
             bursts += 1
 
         # assemble RolloutResult in dataset order ------------------------- #
-        tokens = np.concatenate([prompts_np, res_tok], axis=1)
-        mask = np.zeros((B, Lp + max_new), bool)
-        for b in range(B):
-            mask[b, Lp: Lp + res_len[b]] = True
-        old_lp = np.concatenate(
-            [np.zeros((B, Lp), np.float32), res_lp], axis=1)
+        if not env_on:
+            Lmax = Lp + max_new
+            tokens = np.concatenate([prompts_np, res_tok], axis=1)
+            mask = np.zeros((B, Lmax), bool)
+            for b in range(B):
+                mask[b, Lp: Lp + res_len[b]] = True
+            old_lp = np.concatenate(
+                [np.zeros((B, Lp), np.float32), res_lp], axis=1)
+            roles = None
+            total_turns = completed  # one turn per sequence
+            self.last_env = None
+        else:
+            Lmax = Lp + max_turns * max_new + (max_turns - 1) * self.obs_budget
+            tokens = np.full((B, Lmax), self.pad_id, np.int32)
+            tokens[:, :Lp] = queue_rows
+            roles = np.zeros((B, Lmax), np.int8)
+            old_lp = np.zeros((B, Lmax), np.float32)
+            rewards = np.zeros(B, np.float32)
+            turns = np.zeros(B, np.int32)
+            for b, ep in enumerate(episodes):
+                n = len(ep.toks)
+                tokens[b, Lp: Lp + n] = ep.toks
+                roles[b, Lp: Lp + n] = ep.roles
+                old_lp[b, Lp: Lp + n] = ep.lps
+                rewards[b] = ep.reward
+                turns[b] = ep.turn
+            mask = roles == 1
+            old_lp = np.where(mask, old_lp, 0.0)
+            res_len = mask.sum(axis=1).astype(np.int32)
+            self.last_env = {
+                "rewards": rewards,
+                "turns": turns,
+                "tool_calls": tool_calls,
+            }
 
         wall = time.perf_counter() - t_start
         steps = int(jax.device_get(t))
         occ_steps = int(jax.device_get(occ))
         gen_tokens = int(res_len.sum())
-        decode_tokens = gen_tokens - B  # first tokens come from prefill
+        # each turn's first token comes from a refill/continuation sample,
+        # not a decode step (single-turn: total_turns == B)
+        decode_tokens = gen_tokens - total_turns
         lane_steps = S * steps
         self.last_stats = {
             "tokens": float(gen_tokens),
@@ -426,12 +758,27 @@ class ContinuousRolloutEngine:
             "prefill_waste": (
                 1.0 - prefill_true_tokens / prefill_lane_tokens
                 if prefill_lane_tokens else 0.0),
+            # per-turn prefill accounting: turn 1 prefills true prompt
+            # tokens; every later turn feeds ONLY the observation plus one
+            # carried response token through the decode path (KV reuse —
+            # the acceptance metric for the episode loop)
+            "prefill_tokens": float(prefill_true_tokens + cont_feed_tokens),
+            "prefill_tokens_turn1": float(prefill_true_tokens),
+            "prefill_tokens_turn2plus": float(cont_feed_tokens),
+            "obs_tokens": float(obs_tokens),
+            "cont_refills": float(cont_refills),
+            "turns": float(total_turns),
         }
+        if env_on:
+            self.last_stats["turns_mean"] = (
+                total_turns / B if B else 0.0)
+            self.last_stats["tool_calls"] = float(tool_calls)
         return RolloutResult(
             jnp.asarray(tokens),
             jnp.asarray(mask),
             jnp.asarray(old_lp),
             jnp.asarray(res_len.astype(np.int32)),
+            None if roles is None else jnp.asarray(roles),
         )
 
 

@@ -1,0 +1,476 @@
+"""Environment/reward subsystem tests: registries, the three built-in envs,
+the engine's multi-turn episode loop (KV reuse, role masking, teacher-forcing
+consistency), the single-turn bitwise-equivalence contract, observation-token
+masking across every registered algorithm, and the full-stack wiring
+(EnvConfig -> ExperimentSpec -> pipeline -> learning)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec
+from repro.configs import ARCHS, EnvConfig, RolloutEngineConfig, reduced
+from repro.core import build_pipeline
+from repro.core.dag import NodeType, Role
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import get_model
+from repro.rl import RLConfig, envs
+from repro.rl.reward import make_math_prompts, math_reward
+from repro.rl.rollout_engine import ContinuousRolloutEngine
+
+TOK = ByteTokenizer()
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260, num_layers=2)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _math_prompts(n, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts, answers = make_math_prompts(rng, n, TOK)
+    return jnp.asarray(prompts), answers
+
+
+def _runtime(name, **kw):
+    cfg = EnvConfig(name=name, **kw)
+    return envs.EnvRuntime(envs.get_env(name), cfg, TOK)
+
+
+# --------------------------------------------------------------------------- #
+# registries
+# --------------------------------------------------------------------------- #
+def test_env_registry_contents():
+    for name in ("function_reward", "calculator", "dialog"):
+        assert name in envs.list_envs()
+        assert envs.get_env(name).name == name
+    assert "math" in envs.list_rewards()
+    assert not envs.get_env("function_reward").multi_turn
+    assert envs.get_env("calculator").multi_turn
+
+
+def test_env_registry_nearest_match_errors():
+    with pytest.raises(KeyError, match="calculator"):
+        envs.get_env("calculater")  # typo -> nearest-match hint
+    with pytest.raises(KeyError, match="Registered"):
+        envs.get_env("no_such_env")
+    with pytest.raises(KeyError, match="math"):
+        envs.get_reward("matth")
+    with pytest.raises(KeyError, match="already registered"):
+        envs.register_env(envs.get_env("calculator"))
+    # override is allowed and idempotent
+    envs.register_env(envs.get_env("calculator"), override=True)
+    with pytest.raises(KeyError, match="already registered"):
+        envs.register_reward(envs.get_reward("math"))
+
+
+def test_runtime_rejects_multi_turn_on_single_turn_env():
+    with pytest.raises(ValueError, match="single-turn"):
+        _runtime("function_reward", max_turns=3)
+
+
+def test_env_config_validation():
+    with pytest.raises(ValueError, match="max_turns"):
+        EnvConfig(name="dialog", max_turns=0)
+    with pytest.raises(ValueError, match="turn_budget"):
+        EnvConfig(name="dialog", turn_budget=-1)
+    with pytest.raises(ValueError, match="obs_budget"):
+        EnvConfig(name="dialog", obs_budget=0)
+    assert not EnvConfig().enabled
+    assert EnvConfig(name="dialog").enabled
+
+
+# --------------------------------------------------------------------------- #
+# built-in environments (host protocol)
+# --------------------------------------------------------------------------- #
+def test_function_reward_env_matches_host_reward():
+    rt = _runtime("function_reward")
+    prompts, answers = _math_prompts(6, seed=3)
+    for b in range(6):
+        env = rt.make_episode()
+        env.reset(np.asarray(prompts[b]))
+        resp = np.concatenate(
+            [TOK.encode(str(int(answers[b]))), [TOK.eos_id]])
+        obs, r, done, _ = env.step(resp)
+        assert done and len(obs) == 0
+        want = math_reward([str(int(answers[b]))], answers[b:b + 1])[0]
+        assert r == pytest.approx(float(want)) == 1.0
+
+
+def test_calculator_env_protocol():
+    rt = _runtime("calculator", max_turns=3)
+    env = rt.make_episode()
+    env.reset(TOK.encode("12+34="))
+    # well-formed tool call: the env evaluates the called expression
+    obs, r, done, info = env.step(TOK.encode("CALL 12+34"))
+    assert not done and info["tool_call"] and r == 0.0
+    assert TOK.decode(obs) == "46="
+    # final digit-leading turn is the scored answer
+    obs, r, done, info = env.step(
+        np.concatenate([TOK.encode("46"), [TOK.eos_id]]))
+    assert done and r == 1.0 and info["answered"]
+    assert info["tool_calls"] == 1
+
+
+def test_calculator_env_malformed_call_and_junk():
+    rt = _runtime("calculator", max_turns=3)
+    env = rt.make_episode()
+    env.reset(TOK.encode("03+04="))
+    # malformed CALL falls back to the prompt's own expression
+    obs, r, done, _ = env.step(TOK.encode("CALL banana"))
+    assert not done and TOK.decode(obs) == "7="
+    # junk burns a turn; the env re-asks
+    env2 = rt.make_episode()
+    env2.reset(TOK.encode("03+04="))
+    obs, r, done, info = env2.step(TOK.encode("xyz"))
+    assert not done and info["malformed"] and TOK.decode(obs) == ";03+04="
+
+
+def test_dialog_env_per_turn_partial_rewards():
+    rt = _runtime("dialog", max_turns=3)
+    env = rt.make_episode()
+    env.reset(TOK.encode("02+03="))
+    right = np.concatenate([TOK.encode("5"), [TOK.eos_id]])
+    obs, r1, d1, _ = env.step(right)  # turn 1: half credit
+    assert not d1 and r1 == pytest.approx(0.5) and len(obs) > 0
+    obs, r2, d2, _ = env.step(TOK.encode("9"))  # turn 2: wrong
+    assert not d2 and r2 == 0.0
+    obs, r3, d3, _ = env.step(right)  # final turn: full credit
+    assert d3 and r3 == pytest.approx(1.0) and len(obs) == 0
+
+
+# --------------------------------------------------------------------------- #
+# engine episode loop
+# --------------------------------------------------------------------------- #
+def test_single_turn_env_bitwise_identical_to_pre_env_path(tiny_model):
+    """The equivalence contract: a single-turn env only *scores* — the
+    generation schedule (keys, shapes, refills) is untouched, so tokens,
+    masks, logprobs, and lengths are bit-for-bit the env-off engine's (which
+    is itself token-identical to the pre-PR lockstep path under a fixed slot
+    schedule)."""
+    cfg, model, params = tiny_model
+    prompts, answers = _math_prompts(8, seed=1)
+    key = jax.random.PRNGKey(9)
+    kw = dict(max_new=10, temperature=2.0, eos_id=TOK.eos_id, pad_id=0)
+    ref = ContinuousRolloutEngine(model, **kw)(params, prompts, key)
+    eng = ContinuousRolloutEngine(
+        model, env=_runtime("function_reward"), max_turns=1, **kw)
+    got = eng(params, prompts, key)
+    np.testing.assert_array_equal(np.asarray(got.tokens), np.asarray(ref.tokens))
+    np.testing.assert_array_equal(
+        np.asarray(got.response_mask), np.asarray(ref.response_mask))
+    np.testing.assert_array_equal(
+        np.asarray(got.old_logprob), np.asarray(ref.old_logprob))
+    np.testing.assert_array_equal(
+        np.asarray(got.lengths), np.asarray(ref.lengths))
+    # role_mask marks every counted token an action, nothing an observation
+    rm = np.asarray(got.role_mask)
+    np.testing.assert_array_equal(rm == 1, np.asarray(ref.response_mask))
+    assert not (rm == 2).any()
+    # and the env scored each episode exactly once
+    assert eng.last_env is not None
+    np.testing.assert_array_equal(eng.last_env["turns"], np.ones(8))
+
+
+def test_multi_turn_kv_reuse_prefill_metric(tiny_model):
+    """Acceptance criterion: continuation prefill for turn >= 2 counts ONLY
+    observation tokens (plus the one carried response token per turn) —
+    never the shared prompt/response prefix."""
+    cfg, model, params = tiny_model
+    prompts, _ = _math_prompts(6, seed=2)
+    eng = ContinuousRolloutEngine(
+        model, max_new=8, temperature=2.0, eos_id=TOK.eos_id, pad_id=0,
+        num_slots=3, env=_runtime("dialog", max_turns=3, obs_budget=8),
+        max_turns=3, turn_budget=4, obs_budget=8,
+    )
+    got = eng(params, prompts, jax.random.PRNGKey(4))
+    s = eng.last_stats
+    turns = eng.last_env["turns"]
+    np.testing.assert_array_equal(turns, np.full(6, 3))  # dialog always runs 3
+    n_cont = int((turns - 1).sum())
+    rm = np.asarray(got.role_mask)
+    n_obs = int((rm == 2).sum())
+    # the KV-reuse contract: later-turn prefill == observations + one carried
+    # token per continuation
+    assert s["prefill_tokens_turn2plus"] == n_obs + n_cont
+    assert s["obs_tokens"] == n_obs
+    assert s["prefill_tokens"] == s["prefill_tokens_turn1"] + \
+        s["prefill_tokens_turn2plus"]
+    # re-prefilling full prefixes would cost at least prompt-width per
+    # continuation on top of the observations — assert we stayed well under
+    assert s["prefill_tokens_turn2plus"] < n_obs + n_cont + \
+        n_cont * prompts.shape[1]
+    assert s["cont_refills"] >= 1
+
+
+def test_multi_turn_teacher_forcing_consistency(tiny_model):
+    """The assembled multi-turn sequence must be consistent with its own
+    behaviour logprobs: recomputing full-sequence logprobs at every action
+    position agrees with what the engine recorded turn by turn — the
+    end-to-end proof that continuations resumed from the right KV state."""
+    cfg, model, params = tiny_model
+    prompts, _ = _math_prompts(6, seed=5)
+    eng = ContinuousRolloutEngine(
+        model, max_new=8, temperature=2.0, eos_id=TOK.eos_id, pad_id=0,
+        num_slots=3, env=_runtime("dialog", max_turns=3, obs_budget=8),
+        max_turns=3, turn_budget=4, obs_budget=8,
+    )
+    got = eng(params, prompts, jax.random.PRNGKey(8))
+    lp, _ = model.logprobs(params, got.tokens)
+    m = np.asarray(got.response_mask)
+    assert m.sum() > 0
+    np.testing.assert_allclose(
+        np.asarray(got.old_logprob)[m], np.asarray(lp)[m], atol=5e-2)
+    # observations and prompt tokens carry zero behaviour logprob
+    assert np.all(np.asarray(got.old_logprob)[~m] == 0.0)
+
+
+def test_multi_turn_role_mask_structure(tiny_model):
+    """role_mask partitions every sequence: prompt/pad 0, actions 1 (exactly
+    response_mask), observations 2; actions and observations never overlap,
+    and each continuing episode has at least one observation token."""
+    cfg, model, params = tiny_model
+    prompts, _ = _math_prompts(4, seed=6)
+    eng = ContinuousRolloutEngine(
+        model, max_new=6, temperature=2.0, eos_id=TOK.eos_id, pad_id=0,
+        env=_runtime("dialog", max_turns=2, obs_budget=8),
+        max_turns=2, turn_budget=3, obs_budget=8,
+    )
+    got = eng(params, prompts, jax.random.PRNGKey(2))
+    rm = np.asarray(got.role_mask)
+    mask = np.asarray(got.response_mask)
+    np.testing.assert_array_equal(rm == 1, mask)
+    assert set(np.unique(rm)) <= {0, 1, 2}
+    assert ((rm == 2).sum(axis=1) >= 1).all()  # every episode continued once
+    Lp = prompts.shape[1]
+    assert not (rm[:, :Lp] != 0).any()  # prompt region is role 0
+
+
+# --------------------------------------------------------------------------- #
+# observation-token masking across every registered algorithm
+# --------------------------------------------------------------------------- #
+def _masked_batch(seed=0):
+    """A synthetic 4-sequence batch with interleaved action/observation
+    tokens: 2 prompt, 3 action, 2 obs, 2 action positions."""
+    rng = np.random.default_rng(seed)
+    B, L = 4, 9
+    roles = np.zeros((B, L), np.int8)
+    roles[:, 2:5] = 1
+    roles[:, 5:7] = 2
+    roles[:, 7:9] = 1
+    mask = jnp.asarray(roles == 1)
+    lp = jnp.asarray(rng.normal(size=(B, L)).astype(np.float32) * 0.1)
+    old_lp = jnp.asarray(rng.normal(size=(B, L)).astype(np.float32) * 0.1)
+    adv = jnp.asarray(rng.normal(size=(B, L)).astype(np.float32))
+    return roles, mask, lp, old_lp, adv
+
+
+@pytest.mark.parametrize("algo", ["grpo", "ppo", "rloo", "reinforce_pp"])
+def test_obs_tokens_excluded_from_actor_loss(algo):
+    """Perturbing logprobs at observation positions must not change any
+    registered algorithm's actor loss: the loss only reads response_mask
+    positions, and response_mask == (role_mask == 1)."""
+    from repro.rl import algorithms
+
+    spec = algorithms.get_algorithm(algo)
+    rl = RLConfig(algorithm=algo, group_size=2)
+    roles, mask, lp, old_lp, adv = _masked_batch()
+    batch = {
+        "old_logprob": old_lp,
+        "ref_logprob": old_lp * 0.5,
+        "advantages": adv,
+        "response_mask": mask,
+    }
+    base = spec.actor_loss(rl, lp, batch)["loss"]
+    obs = jnp.asarray(roles == 2)
+    lp_perturbed = jnp.where(obs, lp + 37.0, lp)
+    batch_perturbed = dict(
+        batch,
+        old_logprob=jnp.where(obs, old_lp - 11.0, old_lp),
+        advantages=jnp.where(obs, adv + 100.0, adv),
+    )
+    got = spec.actor_loss(rl, lp_perturbed, batch_perturbed)["loss"]
+    np.testing.assert_allclose(float(got), float(base), rtol=1e-6)
+
+
+def test_obs_tokens_excluded_hand_computed_reference():
+    """Hand-computed PPO surrogate on a 1-sequence batch: the loss equals
+    the masked-mean over the 3 action tokens only — the 2 observation tokens
+    contribute nothing even with huge advantages."""
+    from repro.rl import loss as losses
+
+    lp = jnp.asarray([[0.0, -0.1, -0.2, -0.3, -0.4]])
+    old = jnp.asarray([[0.0, -0.2, -0.2, -0.1, -0.2]])
+    adv = jnp.asarray([[9e9, 1.0, -2.0, 9e9, 0.5]])  # positions 0,3 are obs
+    mask = jnp.asarray([[False, True, True, False, True]])
+    out = losses.ppo_policy_loss(lp, old, adv, mask, clip_eps=0.2)
+    ratio = np.exp(np.asarray(lp) - np.asarray(old))[0]
+    clipped = np.clip(ratio, 0.8, 1.2)
+    a = np.asarray(adv)[0]
+    surr = np.minimum(ratio * a, clipped * a)
+    want = -(surr[1] + surr[2] + surr[4]) / 3.0
+    np.testing.assert_allclose(float(out["loss"]), want, rtol=1e-5)
+
+
+def test_obs_tokens_excluded_from_advantage_and_is_weights():
+    """Broadcast advantages and truncated-IS weights are zero at observation
+    positions (mask excludes them), for the grouped and global estimators."""
+    from repro.rl import advantage as adv_mod
+    from repro.rl import loss as losses
+
+    roles, mask, lp, old_lp, _ = _masked_batch(seed=1)
+    rewards = jnp.asarray([1.0, 0.0, 0.5, 0.25])
+    obs = np.asarray(roles == 2)
+    for fn in (
+        lambda: adv_mod.grpo(rewards, mask, group_size=2),
+        lambda: adv_mod.rloo(rewards, mask, group_size=2),
+        lambda: adv_mod.reinforce_pp(rewards, mask),
+    ):
+        a = np.asarray(fn())
+        assert np.all(a[obs] == 0.0)
+        assert np.any(a[np.asarray(mask)] != 0.0)
+    w = losses.truncated_is_weights(lp, old_lp, mask, rho_max=2.0)
+    rho = np.asarray(w["rho"])
+    assert np.all(rho[obs] == 0.0)
+    assert np.all(rho[np.asarray(mask)] > 0.0)
+
+
+# --------------------------------------------------------------------------- #
+# stack wiring
+# --------------------------------------------------------------------------- #
+def test_with_env_stage_retargets_reward_node():
+    from repro.rl import algorithms
+
+    dag = envs.with_env_stage(algorithms.grpo_dag())
+    assert "env_compute" in dag.nodes and "reward_compute" not in dag.nodes
+    node = dag.nodes["env_compute"]
+    assert node.role == Role.ENV and node.type == NodeType.COMPUTE
+    assert dag.nodes["advantage_compute"].deps == ("env_compute",)
+    # validate_dag accepts ENV in place of REWARD
+    algorithms.get_algorithm("grpo").validate_dag(dag)
+    # a DAG with no reward node passes through untouched
+    assert envs.with_env_stage(dag) is dag
+
+
+def test_experiment_spec_env_round_trip_and_back_compat():
+    exp = ExperimentSpec(
+        model=reduced(ARCHS["qwen2.5-7b"], vocab_size=260),
+        rl=RLConfig(algorithm="grpo", group_size=2, max_new_tokens=6),
+        rollout=RolloutEngineConfig(engine="continuous", num_slots=4),
+        env=EnvConfig(name="calculator", max_turns=3, turn_budget=4),
+    )
+    assert ExperimentSpec.from_json(exp.to_json()) == exp
+    # back-compat: dicts without the env key default to env-off
+    d = exp.to_dict()
+    del d["env"]
+    restored = ExperimentSpec.from_dict(d)
+    assert restored.env == EnvConfig() and not restored.env.enabled
+
+
+def test_multi_turn_gated_for_ssm_archs():
+    """Multi-turn continuations are attention-only: a done slot keeps
+    stepping (fed PAD) until the burst exits, which corrupts SSM recurrent
+    state irreversibly — the engine must refuse rather than silently resume
+    episodes from a wrong state. Single-turn env on SSM stays allowed."""
+    cfg = reduced(ARCHS["mamba2-2.7b"], vocab_size=260)
+    model = get_model(cfg)
+    with pytest.raises(ValueError, match="attention-only"):
+        ContinuousRolloutEngine(
+            model, max_new=4, env=_runtime("dialog", max_turns=2),
+            max_turns=2)
+    ContinuousRolloutEngine(  # single-turn env is fine on SSM
+        model, max_new=4, env=_runtime("function_reward"), max_turns=1)
+
+
+def test_multi_turn_no_global_turn_barrier(tiny_model):
+    """With a drained fresh-prompt queue but continuable episodes in flight,
+    the burst must hand control back as slots finish their turns instead of
+    holding them at an all-slots barrier: with S == B and max_turns > 1 the
+    engine needs more than one burst per turn wave (the barrier failure mode
+    executed exactly max_turns bursts)."""
+    cfg, model, params = tiny_model
+    prompts, _ = _math_prompts(8, seed=11)
+    eng = ContinuousRolloutEngine(
+        model, max_new=8, temperature=2.0, eos_id=TOK.eos_id, pad_id=0,
+        env=_runtime("dialog", max_turns=3, obs_budget=8),
+        max_turns=3, turn_budget=6, obs_budget=8,
+    )
+    got = eng(params, prompts, jax.random.PRNGKey(13))
+    lens = np.asarray(got.lengths)
+    # varied per-turn lengths at temperature 2.0 -> turn waves desynchronize;
+    # the engine must have interleaved refills rather than run 3 barriers
+    assert eng.last_stats["bursts"] > 3.0 or len(set(lens.tolist())) == 1
+    np.testing.assert_array_equal(eng.last_env["turns"], np.full(8, 3))
+
+
+def test_multi_turn_requires_continuous_engine():
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260)
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=4)
+    with pytest.raises(ValueError, match="continuous"):
+        build_pipeline(cfg, rl, prompts_per_iter=2,
+                       env=EnvConfig(name="dialog", max_turns=2))
+
+
+def test_single_turn_env_through_lockstep_pipeline():
+    """Single-turn envs run on the lockstep engine too: the ENV stage steps
+    each episode post-hoc over the finished rollout, and the computed
+    rewards match the REWARD stage's token-path scoring."""
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260)
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=6, lr=1e-4)
+    base = build_pipeline(cfg, rl, prompts_per_iter=4, seed=7)
+    with_env = build_pipeline(
+        cfg, rl, prompts_per_iter=4, seed=7,
+        env=EnvConfig(name="function_reward"))
+    assert "env_compute" in with_env.dag.nodes
+    m0 = base.worker.run_iteration()
+    m1 = with_env.worker.run_iteration()
+    # same seed, same generation path -> same rollout, same reward
+    assert m1["reward/mean"] == pytest.approx(m0["reward/mean"])
+
+
+def test_calculator_pipeline_runs_and_reports_env_metrics():
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260)
+    rl = RLConfig(algorithm="grpo", group_size=2, max_new_tokens=6, lr=1e-4)
+    pipe = build_pipeline(
+        cfg, rl, prompts_per_iter=4,
+        rollout=RolloutEngineConfig(engine="continuous", num_slots=4),
+        env=EnvConfig(name="calculator", max_turns=3, turn_budget=4,
+                      obs_budget=8),
+    )
+    hist = pipe.run(2)
+    for m in hist:
+        assert m["rollout/tokens"] > 0
+        assert 1.0 <= m["env/turns_mean"] <= 3.0
+        assert m["rollout/prefill_tokens_turn2plus"] >= 0.0
+        assert "reward/mean" in m
+        assert any(k.startswith("actor/") for k in m)
+
+
+def test_calculator_grpo_learning_improves_reward():
+    """Acceptance criterion: a smoke-scale 3-turn CalculatorToolEnv GRPO run
+    through ExperimentSpec.compile() lifts mean reward above the
+    random-policy floor (mirrors test_learning_improves_reward)."""
+    from repro.data.dataset import SyntheticMathDataset
+
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260, num_layers=2,
+                  d_model=128, d_ff=256)
+    exp = ExperimentSpec(
+        model=cfg,
+        rl=RLConfig(algorithm="grpo", group_size=8, max_new_tokens=3,
+                    lr=1e-3, kl_coef=0.0),
+        rollout=RolloutEngineConfig(engine="continuous"),
+        env=EnvConfig(name="calculator", max_turns=3, obs_budget=8),
+        prompts_per_iter=8,
+        seed=1234,
+    )
+    ds = SyntheticMathDataset(4096, seed=1234, max_operand=4)
+    pipe = exp.compile(dataset=ds)
+    hist = pipe.run(90)
+    early = np.mean([h["reward/mean"] for h in hist[:8]])
+    late = np.mean([h["reward/mean"] for h in hist[-8:]])
+    assert late > early + 0.05, (early, late)
+    # as the policy learns to answer, episodes shorten toward single-turn
+    assert hist[-1]["env/turns_mean"] <= hist[0]["env/turns_mean"] + 1.0

@@ -115,3 +115,58 @@ def test_ssd_random_geometry(nh, p, g, n, nc, seed):
                                atol=5e-4, rtol=5e-4)
     np.testing.assert_allclose(np.asarray(h_p), np.asarray(h_r),
                                atol=2e-3, rtol=2e-3)
+
+
+@st.composite
+def reward_rollouts(draw):
+    """Randomized well-formed rollouts for the math reward: per row an
+    answer in [0, 198] (the synthetic task's range) and a response that is
+    1-4 decimal digits followed by EOS — the correct answer, a digit-prefix
+    corruption, or unrelated digits. Both reward implementations define
+    their contract on exactly this EOS-terminated shape (a budget-truncated
+    response with no EOS is scored exact-match by the host path but not by
+    the token path — deliberately out of contract)."""
+    B = draw(st.integers(1, 6))
+    rows = []
+    for _ in range(B):
+        answer = draw(st.integers(0, 198))
+        kind = draw(st.sampled_from(["exact", "prefix", "random"]))
+        if kind == "exact":
+            digits = str(answer)
+        elif kind == "prefix":
+            digits = str(answer)[: draw(st.integers(1, 3))] + draw(
+                st.text("0123456789", min_size=0, max_size=2))
+        else:
+            digits = draw(st.text("0123456789", min_size=1, max_size=4))
+        rows.append((answer, digits))
+    return rows
+
+
+@given(reward_rollouts(), st.integers(0, 2**31 - 1))
+def test_math_reward_host_and_token_paths_agree(rows, seed):
+    """Property (PR-5 satellite): the host-side ``math_reward`` and the
+    jitted ``math_reward_tokens`` agree on every randomized EOS-terminated
+    rollout — exact matches, digit-prefix partial credit, and misses."""
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.rl.reward import math_reward, math_reward_tokens
+
+    tok = ByteTokenizer()
+    rng = np.random.default_rng(seed)
+    B = len(rows)
+    Lp, T = 6, 6  # prompt width, response budget (4 digits + EOS fits)
+    L = Lp + T
+    tokens = np.zeros((B, L), np.int32)
+    mask = np.zeros((B, L), bool)
+    answers = np.zeros(B, np.int32)
+    texts = []
+    for b, (answer, digits) in enumerate(rows):
+        answers[b] = answer
+        tokens[b, :Lp] = rng.integers(3, 200, Lp)  # arbitrary prompt bytes
+        resp = np.concatenate([tok.encode(digits), [tok.eos_id]])
+        tokens[b, Lp: Lp + len(resp)] = resp
+        mask[b, Lp: Lp + len(resp)] = True
+        texts.append(digits)
+    want = math_reward(texts, answers)
+    got = math_reward_tokens(
+        jnp.asarray(tokens), jnp.asarray(mask), jnp.asarray(answers), tok)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-6)

@@ -145,6 +145,34 @@ def test_early_exit_beats_lockstep_schedule(tiny_model):
     assert eng.last_stats["decode_steps"] == max(lens) - 1
 
 
+def test_refill_regression_mixed_budgets_no_starvation(tiny_model):
+    """Queue drained mid-refill under a mixed-length budget set: every
+    sequence must complete at exactly its budget (no slot starvation when
+    late refills race the early-exit), and the occupancy metric must stay
+    consistent with the token accounting — active lane-steps equal the
+    decode-produced tokens, i.e. occupancy * slots * steps == sum(len - 1)
+    over all sequences (each sequence's first token comes from prefill)."""
+    cfg, model, params = tiny_model
+    B, Lp, T, S = 12, 6, 16, 4
+    prompt = _prompts(B, Lp, seed=21)
+    # mixed budgets: several 1-token bursts (immediate-done refills), some
+    # mid-length, a few full-budget stragglers — the drain pattern that
+    # exercises pop() on a shrinking queue while slots free in bursts
+    budgets = np.array([1, 16, 2, 1, 7, 16, 3, 1, 5, 2, 16, 4], np.int32)
+    eng = ContinuousRolloutEngine(model, max_new=T, temperature=1.0,
+                                  pad_id=0, num_slots=S)
+    got = eng(params, prompt, jax.random.PRNGKey(17), budgets=budgets)
+    lens = np.asarray(got.lengths)
+    # no starvation: every sequence ran to its cap (no EOS id configured)
+    np.testing.assert_array_equal(lens, budgets)
+    s = eng.last_stats
+    assert s["refills"] >= 2, "12 prompts over 4 slots must refill"
+    # occupancy consistency: active lane-steps == decode-produced tokens
+    active_steps = s["slot_occupancy"] * s["num_slots"] * s["decode_steps"]
+    assert active_steps == pytest.approx(int((budgets - 1).sum()))
+    assert 0.0 < s["slot_occupancy"] <= 1.0
+
+
 # --------------------------------------------------------------------------- #
 # bucketing / chunked prefill
 # --------------------------------------------------------------------------- #
