@@ -81,6 +81,34 @@ def rollout_table() -> str:
     return "\n".join(out)
 
 
+def serving_table() -> str:
+    """Render the committed serving baseline (BENCH_serving.json):
+    streaming engine vs lockstep batching goodput, TTFT, prefix hit rate."""
+    path = os.path.join(RESULTS, "BENCH_serving.json")
+    if not os.path.exists(path):
+        return ""
+    r = json.load(open(path))
+    wl, lk, st = r["workload"], r["lockstep"], r["streaming"]
+    out = [
+        f"## Serving ({wl['num_requests']} requests at "
+        f"{wl['arrival_rate']:.0f}/s Poisson, {wl['num_slots']} slots, "
+        f"mean budget {wl['mean_budget']:.1f} of max_new {wl['max_new']})\n",
+        "| arm | goodput tok/s | TTFT p50 | TTFT p99 | per-token p50 "
+        "| prefix hits |",
+        "|---|---|---|---|---|---|",
+        f"| lockstep | {lk['goodput_tokens_per_s']:.0f} "
+        f"| {lk['ttft_p50_s'] * 1e3:.0f}ms | {lk['ttft_p99_s'] * 1e3:.0f}ms "
+        f"| {lk['tpot_p50_s'] * 1e3:.1f}ms | - |",
+        f"| streaming | {st['goodput_tokens_per_s']:.0f} "
+        f"| {st['ttft_p50_s'] * 1e3:.0f}ms | {st['ttft_p99_s'] * 1e3:.0f}ms "
+        f"| {st['tpot_p50_s'] * 1e3:.1f}ms "
+        f"| {st['prefix_hit_rate'] * 100:.0f}% |",
+        f"\n**{r['speedup']:.2f}x goodput over lockstep** "
+        f"({wl['shared_prefix']}; {wl['budget_mix']} budgets).",
+    ]
+    return "\n".join(out)
+
+
 def multiturn_table() -> str:
     """Render the committed multi-turn env baseline (BENCH_multiturn.json):
     single-turn vs 3-turn calculator throughput, turn-overlap occupancy, and
@@ -117,6 +145,9 @@ def main() -> None:
     rt = rollout_table()
     if rt:
         print(rt + "\n")
+    sv = serving_table()
+    if sv:
+        print(sv + "\n")
     mtt = multiturn_table()
     if mtt:
         print(mtt + "\n")

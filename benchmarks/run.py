@@ -19,6 +19,7 @@ def main() -> None:
         coordinator,
         multiturn,
         rollout,
+        serving,
         fig09_ppo_throughput,
         fig10_grpo_throughput,
         fig11_scalability,
@@ -39,6 +40,7 @@ def main() -> None:
         ("coordinator", coordinator.main),
         ("async_pipeline", async_pipeline.main),
         ("rollout", rollout.main),
+        ("serving", serving.main),
         ("multiturn", multiturn.main),
         ("algorithms", algorithms.main),
         ("roofline", roofline.main),

@@ -1,0 +1,201 @@
+"""Serving arm: request-streaming engine vs lockstep batching on a
+Poisson-arrival, shared-prefix-heavy workload.
+
+The workload is ``repro.serving.scheduler.synthetic_requests``: requests
+arrive on a Poisson clock, 80% open with one of two fixed multi-page system
+prompts (the shape a prefix cache exists for), and response budgets follow
+the skewed 70/20/10 short/medium/full mix of ``benchmarks/rollout.py``.
+Both arms serve the SAME requests (same prompts, budgets, arrival stamps):
+
+  * **lockstep** — requests grouped, in arrival order, into fixed batches
+    of ``SLOTS`` through ``rl.rollout.generate``: a batch launches only
+    once its last member has arrived, prompts are right-padded to one
+    fixed width (one compiled executable), and every batch scans all
+    ``MAX_NEW - 1`` decode steps regardless of budgets. A request's first
+    token exists only when its whole batch completes — that is its TTFT.
+    Arrival waits are virtual-clocked (no sleeping), the same waits the
+    streaming arm absorbs for real.
+  * **streaming** — the ``ServingEngine``: per-request admission into the
+    slot pool the moment a lane frees, prefix-cache hits skip shared
+    prompt pages, finished slots refill immediately, and token deltas
+    stream out per decode burst.
+
+Both arms are fully warmed (the streaming engine replays the identical
+workload once, then resets with the prefix cache cleared, so the timed pass
+pays cold-cache prefills but zero compiles).
+
+Reported per arm (CSV rows via benchmarks.common.emit, and the committed
+``results/BENCH_serving.json`` baseline via ``--json``):
+
+  * goodput tok/s      — counted response tokens / wall (arrival waits in)
+  * TTFT p50/p99       — arrival -> first streamed token
+  * per-token p50/p99  — mean inter-token latency after the first token
+  * prefix hit rate    — streaming only: cached / total prompt tokens
+  * speedup            — streaming goodput over lockstep goodput
+                         (acceptance floor: >= 1.5x on this workload)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, tiny_cfg
+from repro.configs import ServingConfig
+from repro.models import get_model
+from repro.rl.rollout import generate
+from repro.serving import Request, ServingEngine, percentiles, \
+    synthetic_requests
+
+N_REQUESTS = 48
+RATE = 40.0  # Poisson arrivals/s — saturating for the tiny CPU model
+SLOTS = 8  # streaming slot pool == lockstep batch width (lane parity)
+PAGE = 16
+MAX_LEN = 128
+MAX_NEW = 64  # lockstep always scans all of it; budgets skew far below
+BURST = 8
+
+
+def _workload(seed: int) -> List[Request]:
+    return synthetic_requests(
+        N_REQUESTS, arrival_rate=RATE, page_size=PAGE,
+        shared_prefix_pages=2, num_prefixes=2, shared_frac=0.8,
+        max_new=MAX_NEW, temperature=1.0, seed=seed)
+
+
+def _stream_metrics(streams) -> Dict[str, float]:
+    ttft = percentiles([s.ttft for s in streams])
+    tpot = percentiles([s.tpot for s in streams])
+    return {"ttft_p50_s": ttft["p50"], "ttft_p99_s": ttft["p99"],
+            "tpot_p50_s": tpot["p50"], "tpot_p99_s": tpot["p99"]}
+
+
+def run_lockstep(model, params, reqs: List[Request], seed: int) -> Dict:
+    width = max(len(r.prompt) for r in reqs)
+    batches = [reqs[i:i + SLOTS] for i in range(0, len(reqs), SLOTS)]
+
+    def one_batch(group, key):
+        B = len(group)
+        prompts = np.zeros((B, width), np.int32)
+        budgets = np.zeros((B,), np.int32)
+        for j, r in enumerate(group):
+            prompts[j, : len(r.prompt)] = r.prompt
+            budgets[j] = r.max_new
+        res = generate(model, params, jax.numpy.asarray(prompts), key,
+                       max_new=MAX_NEW, temperature=1.0,
+                       budgets=jax.numpy.asarray(budgets))
+        return int(np.asarray(res.lengths).sum())
+
+    key = jax.random.PRNGKey(seed + 100)
+    one_batch(batches[0], key)  # warmup: the single compiled shape
+
+    # virtual clock: batch b starts at max(prev end, its last arrival);
+    # its requests' first tokens exist only at batch end
+    tokens, clock, ttfts, tpots = 0, 0.0, [], []
+    t_wall = time.perf_counter()
+    for b, group in enumerate(batches):
+        clock = max(clock, max(r.arrival for r in group))
+        tb = time.perf_counter()
+        n = one_batch(group, jax.random.fold_in(key, b))
+        dt = time.perf_counter() - tb
+        clock += dt
+        tokens += n
+        per_step = dt / max(MAX_NEW - 1, 1)
+        for r in group:
+            ttfts.append(clock - r.arrival)
+            tpots.append(per_step)
+    busy = time.perf_counter() - t_wall
+    return {
+        "goodput_tokens_per_s": tokens / clock if clock else 0.0,
+        "tokens": float(tokens),
+        "wall_s": clock,
+        "busy_s": busy,
+        "batches": float(len(batches)),
+        "decode_steps": float(len(batches) * (MAX_NEW - 1)),
+        "ttft_p50_s": percentiles(ttfts)["p50"],
+        "ttft_p99_s": percentiles(ttfts)["p99"],
+        "tpot_p50_s": percentiles(tpots)["p50"],
+        "tpot_p99_s": percentiles(tpots)["p99"],
+    }
+
+
+def run_streaming(model, params, reqs: List[Request], seed: int) -> Dict:
+    scfg = ServingConfig(num_slots=SLOTS, max_len=MAX_LEN, max_new=MAX_NEW,
+                         page_size=PAGE, decode_burst=BURST)
+    eng = ServingEngine(model, scfg, params=params,
+                        key=jax.random.PRNGKey(seed + 200))
+    warm = _workload(seed)  # identical shapes -> compiles all executables
+    for w in warm:
+        w.rid -= N_REQUESTS
+    eng.serve(warm, realtime=False)
+    eng.reset_stats()  # prefix cache cleared: the timed pass starts cold
+
+    streams = eng.serve(reqs, realtime=True)
+    st = eng.stats()
+    st.update(_stream_metrics(
+        [s for s in streams if s.finish_reason != "rejected"]))
+    return st
+
+
+def run(seed: int = 0) -> Dict:
+    cfg = tiny_cfg()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    lock = run_lockstep(model, params, _workload(seed), seed)
+    stream = run_streaming(model, params, _workload(seed), seed)
+    budgets = np.array([r.max_new for r in _workload(seed)])
+    return {
+        "workload": {
+            "num_requests": N_REQUESTS, "arrival_rate": RATE,
+            "num_slots": SLOTS, "page_size": PAGE, "max_len": MAX_LEN,
+            "max_new": MAX_NEW, "decode_burst": BURST,
+            "shared_prefix": "80% of prompts open with one of 2 fixed "
+                             "2-page system prompts",
+            "budget_mix": "70% 4-8 | 20% 12-20 | 10% 64",
+            "mean_budget": float(budgets.mean()),
+        },
+        "lockstep": lock,
+        "streaming": stream,
+        "speedup": (stream["goodput_tokens_per_s"]
+                    / lock["goodput_tokens_per_s"]),
+    }
+
+
+def main() -> None:
+    r = run()
+    wl, lk, st = r["workload"], r["lockstep"], r["streaming"]
+    emit("serving/lockstep_goodput_tok_s", lk["goodput_tokens_per_s"],
+         f"ttft_p50_ms={lk['ttft_p50_s'] * 1e3:.0f} "
+         f"ttft_p99_ms={lk['ttft_p99_s'] * 1e3:.0f}")
+    emit("serving/streaming_goodput_tok_s", st["goodput_tokens_per_s"],
+         f"ttft_p50_ms={st['ttft_p50_s'] * 1e3:.0f} "
+         f"ttft_p99_ms={st['ttft_p99_s'] * 1e3:.0f} "
+         f"prefix_hit_pct={st['prefix_hit_rate'] * 100:.0f} "
+         f"occupancy_pct={st['slot_occupancy'] * 100:.0f}")
+    emit("serving/speedup_pct", (r["speedup"] - 1.0) * 100.0,
+         f"slots={wl['num_slots']} requests={wl['num_requests']} "
+         f"rate={wl['arrival_rate']:.0f}/s mean_budget={wl['mean_budget']:.1f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the BENCH_serving.json baseline here")
+    args = ap.parse_args()
+    result = run(seed=args.seed)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.json}")
+    print(json.dumps(result, indent=2))

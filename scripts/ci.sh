@@ -36,10 +36,11 @@ else
   # the lightest chunk in the last measured layout (603s vs 987s for the
   # heaviest under 5-way parallel contention). test_envs (~2 min fast tests
   # + ~100s calculator-GRPO learning run) rides with chunk 4, the second-
-  # lightest in that layout.
+  # lightest in that layout. test_serving (~35s of serving-engine compiles)
+  # rides with chunk 2 as well — still well under the heaviest chunk.
   CHUNKS=(
     "tests/test_pipeline.py tests/test_rl.py tests/test_extensions.py"
-    "tests/test_multidevice.py tests/test_core.py tests/test_ft.py tests/test_coordinator.py tests/test_rollout_engine.py"
+    "tests/test_multidevice.py tests/test_core.py tests/test_ft.py tests/test_coordinator.py tests/test_rollout_engine.py tests/test_serving.py"
     "tests/test_kernels.py tests/test_kernels_hypothesis.py tests/test_property.py tests/test_models_units.py tests/test_async_pipeline.py tests/test_tooling.py"
     "tests/test_algorithms.py tests/test_benchmarks.py tests/test_sharding.py tests/test_arch_smoke.py tests/test_workloads.py tests/test_envs.py"
   )

@@ -4,6 +4,7 @@ from repro.configs.base import (
     EnvConfig,
     ModelConfig,
     RolloutEngineConfig,
+    ServingConfig,
     ShapeConfig,
     ALL_SHAPES,
     SHAPES_BY_NAME,

@@ -79,6 +79,16 @@ class Model:
         """Slot-reset: overwrite arena rows at ``slots`` with fresh rows."""
         return lm.scatter_cache_rows(caches, rows, slots)
 
+    # ---- paged KV arena hooks (serving subsystem; attention caches only) --
+    def gather_cache_pages(self, caches, slots, *, num_pages, page_size):
+        """Page-granular gather: leaves (N, R, num_pages, page_size, ...)."""
+        return lm.gather_cache_pages(caches, slots, num_pages=num_pages,
+                                     page_size=page_size)
+
+    def scatter_cache_pages(self, caches, pages, slots):
+        """Write page stacks contiguously into arena rows at ``slots``."""
+        return lm.scatter_cache_pages(caches, pages, slots)
+
 
 def get_model(cfg: ModelConfig) -> Model:
     return Model(cfg)

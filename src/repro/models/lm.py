@@ -644,6 +644,42 @@ def scatter_cache_rows(caches, rows, slots: jax.Array):
     )
 
 
+def gather_cache_pages(caches, slots: jax.Array, *, num_pages: int,
+                       page_size: int):
+    """Page-granular generalization of :func:`gather_cache_rows`: pull the
+    first ``num_pages`` fixed-size KV pages (``page_size``-token spans along
+    the token axis) of the rows at ``slots``. Leaves come back shaped
+    ``(N, R, num_pages, page_size, *rest)`` — one block-table row per lane —
+    ready to be stored into a page pool (``repro.serving.paged_arena``).
+
+    Attention caches only: every leaf must carry the token axis at index 2
+    (``(N, B, W, ...)``); SSM recurrent state has no token axis to page.
+    """
+    span = num_pages * page_size
+
+    def g(a):
+        rows = jnp.take(a, slots, axis=1)[:, :, :span]
+        return rows.reshape(
+            rows.shape[:2] + (num_pages, page_size) + rows.shape[3:])
+
+    return jax.tree.map(g, caches)
+
+
+def scatter_cache_pages(caches, pages, slots: jax.Array):
+    """Inverse of :func:`gather_cache_pages`: write per-lane page stacks
+    (leaves ``(N, R, k, page_size, *rest)``) contiguously into the arena
+    rows at ``slots``, covering token positions ``[0, k * page_size)``.
+    Out-of-range slot ids are dropped (padding lanes), mirroring
+    :func:`scatter_cache_rows`."""
+
+    def s(a, p):
+        span = p.shape[2] * p.shape[3]
+        flat = p.reshape(p.shape[:2] + (span,) + p.shape[4:])
+        return a.at[:, slots, :span].set(flat.astype(a.dtype), mode="drop")
+
+    return jax.tree.map(s, caches, pages)
+
+
 def mask_padded_vocab(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
     if cfg.padded_vocab == cfg.vocab_size:
         return logits

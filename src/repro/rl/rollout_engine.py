@@ -103,10 +103,22 @@ class PromptQueue:
     Continuations (:meth:`push`): continuing episodes re-enter the queue in
     exact-feed-length buckets (a continuation batch must share its feed
     width; feeds are short — an observation plus one carried token — so the
-    bucket count stays small). ``pop_work`` serves continuations first:
+    bucket count stays small). ``pop_work`` prefers continuations —
     finishing in-flight episodes bounds the number of saved KV-row sets
-    held off-arena.
+    held off-arena — but only for ``STARVATION_LIMIT`` consecutive pops
+    while fresh prompts wait, so sustained continuation pressure (an env
+    that re-queues a continuation per finished turn, i.e. exactly as fast
+    as slots free) cannot defer fresh prompts indefinitely.
+
+    Both lanes pick the *fullest* bucket (maximal batch of one shape), which
+    on its own would let a small bucket's head wait out every larger bucket;
+    a pass counter ages each non-empty bucket that loses the selection and
+    force-serves any bucket passed over ``STARVATION_LIMIT`` times. Every
+    pending item is therefore served within a bounded number of pops, while
+    schedules too short to trip the limits are untouched.
     """
+
+    STARVATION_LIMIT = 4  # max times a non-empty lane/bucket is passed over
 
     def __init__(self, prompts: np.ndarray, *, pad_id: int, bucket: int = 0,
                  order=None):
@@ -120,6 +132,9 @@ class PromptQueue:
         self.bucket_len = blens
         self._buckets: Dict[int, deque] = {}
         self._cont: Dict[int, deque] = {}
+        self._passes: Dict[int, int] = {}  # fresh-bucket aging
+        self._cont_passes: Dict[int, int] = {}  # cont-bucket aging
+        self._cont_streak = 0  # cont pops in a row while fresh waited
         for i in (range(B) if order is None else order):
             self._buckets.setdefault(int(blens[i]), deque()).append(i)
 
@@ -131,11 +146,29 @@ class PromptQueue:
         """Re-enqueue a continuing episode (multi-turn env path)."""
         self._cont.setdefault(len(cont.feed), deque()).append(cont)
 
+    @staticmethod
+    def _select(buckets: Dict[int, deque], passes: Dict[int, int],
+                limit: int) -> int:
+        """Fullest bucket, unless one has been passed over ``limit`` times
+        (then the oldest-starved, shortest-length one). Losing non-empty
+        buckets age by one pass; the winner's counter resets."""
+        aged = [b for b in buckets if passes.get(b, 0) >= limit]
+        if aged:
+            sel = min(aged, key=lambda b: (-passes[b], b))
+        else:
+            sel = max(buckets, key=lambda b: (len(buckets[b]), -b))
+        for b in buckets:
+            if b != sel:
+                passes[b] = passes.get(b, 0) + 1
+        passes.pop(sel, None)
+        return sel
+
     def pop(self, n: int) -> Tuple[int, List[int]]:
-        """Pop up to ``n`` fresh-prompt indices from the fullest bucket (ties
-        break toward the shorter bucket length). Returns (bucket_len,
-        indices)."""
-        lb = max(self._buckets, key=lambda b: (len(self._buckets[b]), -b))
+        """Pop up to ``n`` fresh-prompt indices from the fullest bucket
+        (ties break toward the shorter bucket length), except that a bucket
+        passed over ``STARVATION_LIMIT`` times is served first. Returns
+        (bucket_len, indices); FIFO within the bucket."""
+        lb = self._select(self._buckets, self._passes, self.STARVATION_LIMIT)
         q = self._buckets[lb]
         take = [q.popleft() for _ in range(min(n, len(q)))]
         if not q:
@@ -144,17 +177,24 @@ class PromptQueue:
 
     def pop_work(self, n: int):
         """Pop up to ``n`` homogeneous work items: ``("cont", feed_len,
-        [_Continuation, ...])`` when continuations pend (fullest feed-length
-        bucket first), else ``("prefill", bucket_len, [row, ...])``. With no
+        [_Continuation, ...])`` or ``("prefill", bucket_len, [row, ...])``.
+        Continuations go first — bounding off-arena KV — until they have
+        monopolized ``STARVATION_LIMIT`` consecutive pops with fresh
+        prompts waiting; then one fresh bucket is served. With no
         continuations this is exactly :meth:`pop` — the single-turn refill
         schedule is untouched."""
-        if self._cont:
-            K = max(self._cont, key=lambda k: (len(self._cont[k]), -k))
+        serve_cont = self._cont and (
+            not self._buckets or self._cont_streak < self.STARVATION_LIMIT)
+        if serve_cont:
+            self._cont_streak = self._cont_streak + 1 if self._buckets else 0
+            K = self._select(self._cont, self._cont_passes,
+                             self.STARVATION_LIMIT)
             q = self._cont[K]
             take = [q.popleft() for _ in range(min(n, len(q)))]
             if not q:
                 del self._cont[K]
             return "cont", K, take
+        self._cont_streak = 0
         lb, idxs = self.pop(n)
         return "prefill", lb, idxs
 

@@ -1,0 +1,29 @@
+"""Request-streaming serving subsystem (see docs/serving.md).
+
+Promotes the continuous rollout engine's slot machinery to a server:
+requests arrive whenever they arrive, stream token deltas back as they
+decode, share prompt KV through a radix prefix cache over a paged arena,
+and keep decoding across live weight hot-swaps.
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.paged_arena import ArenaOutOfPages, PagedKVArena
+from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.scheduler import (
+    AdmissionQueue,
+    Request,
+    RequestStream,
+    percentiles,
+    synthetic_requests,
+)
+
+__all__ = [
+    "ServingEngine",
+    "ArenaOutOfPages",
+    "PagedKVArena",
+    "RadixPrefixCache",
+    "AdmissionQueue",
+    "Request",
+    "RequestStream",
+    "percentiles",
+    "synthetic_requests",
+]

@@ -1,0 +1,592 @@
+"""The streaming serving engine: slot pool + paged arena + prefix cache +
+live weight hot-swap, behind a submit/step/serve host loop.
+
+This is the continuous rollout engine's slot machinery promoted to a
+request-streaming server. The rollout engine answers "generate this fixed
+batch as fast as possible"; serving answers "requests arrive whenever they
+arrive, stream tokens back as they decode, and never stop for a weight
+update". Concretely, per scheduler visit (one ``step()``):
+
+  1. **poll weights** — if the :class:`WeightVersionStore` has published a
+     newer version, swap to it *between* decode bursts: in-flight requests
+     keep their KV and simply continue under the new weights, and every
+     flushed token delta is tagged with the version that decoded it (the
+     prefix cache is cleared on swap — cached KV is version-scoped);
+  2. **admit** — pop the longest-waiting work from the
+     :class:`AdmissionQueue`: parked requests resume by scattering their
+     pooled pages back into a free slot (zero recompute); fresh requests
+     are matched against the radix prefix cache, their cached pages are
+     scattered in, and only the uncached tail of the prompt is prefilled —
+     in ``page_size`` chunks through per-chunk compiled executables, so a
+     cache hit is bitwise-identical to the cold prefill of the same
+     request (the hit path *skips* leading chunks; it never recomputes
+     them differently);
+  3. **decode burst** — a jitted ``lax.while_loop`` stepping every slot up
+     to ``decode_burst`` times, exiting early when any slot finishes (its
+     KV pages and slot go straight back into circulation). Sampling keys
+     are per-request and per-position (``fold_in(fold_in(base, seed),
+     position)``), so a request's tokens are independent of slot placement,
+     co-resident traffic, and park/resume timing;
+  4. **flush** — one bundled host sync; new tokens are appended to each
+     request's :class:`RequestStream` with a timestamp (TTFT/TPOT) and the
+     current weight version; finished slots free; under ``yield_quota``,
+     long-running requests are parked to pages to let waiting arrivals in.
+
+``docs/serving.md`` has the request lifecycle diagram, the page/block-table
+semantics, and the metrics glossary.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ServingConfig
+from repro.models.api import Model
+from repro.serving.paged_arena import ArenaOutOfPages, PagedKVArena
+from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.scheduler import (
+    AdmissionQueue,
+    Request,
+    RequestStream,
+    _Parked,
+    percentiles,
+)
+
+
+class _Active:
+    """Host record of the request occupying a slot."""
+
+    __slots__ = ("req", "stream", "flushed", "since_admit")
+
+    def __init__(self, req: Request, stream: RequestStream,
+                 flushed: int = 0):
+        self.req = req
+        self.stream = stream
+        self.flushed = flushed  # out-row tokens already streamed
+        self.since_admit = 0  # tokens decoded since (re)admission (quota)
+
+
+def _row_sample(logits: jax.Array, keys: jax.Array,
+                temp: jax.Array) -> jax.Array:
+    """Per-row sampling: each lane uses its own key and temperature
+    (temperature 0 = greedy). Row-wise independence is what makes a
+    request's token stream invariant to its co-residents."""
+    scaled = logits / jnp.maximum(temp, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temp <= 0.0, jnp.argmax(logits, axis=-1), sampled)
+
+
+class ServingEngine:
+    """Request-streaming server over one persistent slot arena."""
+
+    def __init__(
+        self,
+        model: Model,
+        scfg: ServingConfig,
+        *,
+        params=None,
+        weight_store=None,
+        eos_id: Optional[int] = None,
+        pad_id: int = 0,
+        key=None,
+        clock=time.perf_counter,
+    ):
+        kinds = model.cfg.layer_kinds()
+        if (model.is_encdec or model.cfg.num_prefix_embeds
+                or any(k[0] != "attn" for k in kinds)
+                or model.cfg.sliding_window is not None
+                or model.cfg.kv_quant):
+            raise ValueError(
+                "the serving engine needs page-addressable KV and chunked "
+                "prefill: attention-only text decoders without SWA rings or "
+                f"int8 caches ({model.cfg.name!r} doesn't qualify)"
+            )
+        if params is None:
+            if weight_store is None or weight_store.current is None:
+                raise ValueError("need params or a published weight store")
+            params = weight_store.current.params
+        self.model = model
+        self.scfg = scfg
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.clock = clock
+        self.weight_store = weight_store
+        self._params = params
+        self._weight_version = (
+            weight_store.version if weight_store is not None
+            and weight_store.current is not None else 0)
+        self._base_key = (jax.random.PRNGKey(0) if key is None else key)
+        self._t0 = clock()
+
+        S, W, ps = scfg.num_slots, scfg.max_len, scfg.page_size
+        self.arena = PagedKVArena(model, num_pages=scfg.pool_pages,
+                                  page_size=ps)
+        self.prefix_cache = (RadixPrefixCache(page_size=ps)
+                             if scfg.prefix_cache else None)
+        self.queue = AdmissionQueue(bucket=ps, max_len=W)
+        self.streams: Dict[int, RequestStream] = {}
+
+        # device slot state ------------------------------------------------
+        self.caches = model.init_caches(S, W)
+        self.cur_tok = jnp.zeros((S,), jnp.int32)
+        self.cache_len = jnp.zeros((S,), jnp.int32)
+        self.resp_len = jnp.zeros((S,), jnp.int32)
+        self.done = jnp.ones((S,), bool)  # every slot starts free
+        self.budget = jnp.zeros((S,), jnp.int32)
+        self.temp = jnp.zeros((S,), jnp.float32)
+        self.slot_keys = jnp.zeros((S, 2), jnp.uint32)
+        self.out_tok = jnp.full((S, scfg.max_new), pad_id, jnp.int32)
+
+        # host slot state --------------------------------------------------
+        self.active: List[Optional[_Active]] = [None] * S
+
+        # jit caches -------------------------------------------------------
+        self._chunk_jit: Dict[tuple, callable] = {}
+        self._admit_jit: Dict[int, callable] = {}
+        self._burst = self._make_burst(S)
+
+        # counters ---------------------------------------------------------
+        self.total_tokens = 0
+        self.decode_steps = 0
+        self.active_lane_steps = 0
+        self.bursts = 0
+        self.parks = 0
+        self.resumes = 0
+        self.weight_swaps = 0
+        self.prefill_chunks = 0
+        self.prompt_tokens = 0
+
+    # ------------------------------------------------------------------ #
+    def now(self) -> float:
+        return self.clock() - self._t0
+
+    def reset_stats(self, *, clear_cache: bool = True) -> None:
+        """Zero every counter, drop finished streams, and restart the wall
+        clock. With ``clear_cache`` the prefix cache empties too (pages back
+        to the pool). The jit caches survive — replaying the identical
+        workload once, resetting, then timing the second pass is how the
+        benchmark keeps compiles out of TTFT. Only valid when drained."""
+        assert self.num_active == 0 and len(self.queue) == 0, \
+            "reset_stats on a busy engine"
+        if clear_cache and self.prefix_cache is not None:
+            self.arena.free(self.prefix_cache.clear())
+            self.prefix_cache.hits = self.prefix_cache.misses = 0
+            self.prefix_cache.hit_tokens = self.prefix_cache.evicted_pages = 0
+        self.streams.clear()
+        self.total_tokens = self.decode_steps = self.active_lane_steps = 0
+        self.bursts = self.parks = self.resumes = self.weight_swaps = 0
+        self.prefill_chunks = self.prompt_tokens = 0
+        self._t0 = self.clock()
+
+    @property
+    def weight_version(self) -> int:
+        return self._weight_version
+
+    @property
+    def num_active(self) -> int:
+        return sum(a is not None for a in self.active)
+
+    # ------------------------------------------------------------------ #
+    # jitted pieces
+    # ------------------------------------------------------------------ #
+    def _chunk_fn(self, R: int, off: int):
+        """One page_size-wide prefill chunk at static offset ``off``. Keyed
+        by (R, off) ONLY: a prefix-cache hit runs the exact executables the
+        cold path ran for the same offsets — the bitwise-identity anchor."""
+        fn = self._chunk_jit.get((R, off))
+        if fn is None:
+            model = self.model
+
+            def chunk(params, tokens, rows):
+                return model.prefill_chunk(params, tokens, rows, offset=off)
+
+            fn = self._chunk_jit[(R, off)] = jax.jit(chunk)
+        return fn
+
+    def _admit_fn(self, R: int):
+        """Admission epilogue: scatter the freshly prefilled rows over the
+        arena, sample each lane's first token (per-request key, position 0),
+        and seed the slot arrays. Out-of-range slot ids drop (pad lanes)."""
+        fn = self._admit_jit.get(R)
+        if fn is None:
+            model, eos, pad = self.model, self.eos_id, self.pad_id
+            W_out = self.scfg.max_new
+
+            def admit(params, caches, rows, slots, logits, req_keys,
+                      lane_len, lane_budget, lane_temp,
+                      cur_tok, cache_len, resp_len, done, budget, temp,
+                      slot_keys, out_tok):
+                caches = model.scatter_cache_rows(caches, rows, slots)
+                k0 = jax.vmap(lambda k: jax.random.fold_in(k, 0))(req_keys)
+                tok0 = _row_sample(logits, k0, lane_temp)
+                done0 = (tok0 == eos) if eos is not None else jnp.zeros(
+                    (R,), bool)
+                done0 = done0 | (lane_budget <= 1)
+                row = jnp.full((R, W_out), pad, out_tok.dtype)
+                row = row.at[:, 0].set(tok0)
+                cur_tok = cur_tok.at[slots].set(tok0, mode="drop")
+                cache_len = cache_len.at[slots].set(lane_len, mode="drop")
+                resp_len = resp_len.at[slots].set(1, mode="drop")
+                done = done.at[slots].set(done0, mode="drop")
+                budget = budget.at[slots].set(lane_budget, mode="drop")
+                temp = temp.at[slots].set(lane_temp, mode="drop")
+                slot_keys = slot_keys.at[slots].set(req_keys, mode="drop")
+                out_tok = out_tok.at[slots].set(row, mode="drop")
+                return (caches, cur_tok, cache_len, resp_len, done, budget,
+                        temp, slot_keys, out_tok, tok0, done0)
+
+            fn = self._admit_jit[R] = jax.jit(admit)
+        return fn
+
+    def _make_burst(self, S: int):
+        """The decode loop: up to ``decode_burst`` steps over every slot,
+        exiting early the moment any slot newly finishes (so its pages and
+        lane recycle immediately) or everything is done."""
+        model, eos, pad = self.model, self.eos_id, self.pad_id
+        W_out, cap = self.scfg.max_new, self.scfg.decode_burst
+
+        def burst(params, caches, cur_tok, cache_len, resp_len, done,
+                  budget, temp, slot_keys, out_tok):
+            n_done_entry = jnp.sum(done)
+            lane = jnp.arange(S)
+
+            def cond(st):
+                done, t = st[4], st[9]
+                return (~jnp.all(done) & (t < cap)
+                        & (jnp.sum(done) == n_done_entry))
+
+            def body(st):
+                (caches, cur_tok, cache_len, resp_len, done, budget,
+                 temp, slot_keys, out_tok, t, occ) = st
+                occ = occ + jnp.sum(~done)
+                logits, caches, cache_len = model.decode_step(
+                    params, cur_tok, caches, cache_len)
+                keys_t = jax.vmap(jax.random.fold_in)(slot_keys, resp_len)
+                nxt = _row_sample(logits, keys_t, temp)
+                nxt = jnp.where(done, pad, nxt)
+                wr = (~done) & (resp_len < W_out)
+                idx = jnp.where(wr, resp_len, W_out)  # OOB -> dropped
+                out_tok = out_tok.at[lane, idx].set(nxt, mode="drop")
+                resp_len = resp_len + wr
+                new_done = done
+                if eos is not None:
+                    new_done = new_done | ((~done) & (nxt == eos))
+                new_done = new_done | (resp_len >= budget)
+                return (caches, nxt, cache_len, resp_len, new_done, budget,
+                        temp, slot_keys, out_tok, t + 1, occ)
+
+            st = (caches, cur_tok, cache_len, resp_len, done, budget,
+                  temp, slot_keys, out_tok, jnp.zeros((), jnp.int32),
+                  jnp.zeros((), jnp.int32))
+            return jax.lax.while_loop(cond, body, st)
+
+        return jax.jit(burst)
+
+    # ------------------------------------------------------------------ #
+    # page bookkeeping helpers
+    # ------------------------------------------------------------------ #
+    def _alloc_pages(self, n: int) -> List[int]:
+        """Allocate from the arena, evicting LRU prefix-cache pages under
+        pressure (freed pages recycle immediately)."""
+        try:
+            return self.arena.alloc(n)
+        except ArenaOutOfPages:
+            if self.prefix_cache is not None:
+                need = n - self.arena.num_free
+                self.arena.free(self.prefix_cache.evict(need))
+            return self.arena.alloc(n)  # may still raise: pool truly full
+
+    def _commit_prompt_pages(self, slot: int, prompt: np.ndarray,
+                             matched: int) -> None:
+        """Commit the prompt's uncached full pages (beyond the ``matched``
+        prefix) into the radix cache, copying their KV out of the slot's
+        freshly prefilled rows. Pool pressure stops the commit early —
+        serving never fails because the cache is full."""
+        ps = self.scfg.page_size
+        n_full = len(prompt) // ps
+        if self.prefix_cache is None or n_full * ps <= matched:
+            return
+        new_pages: List[tuple] = []
+
+        def make_page(p: int) -> int:
+            (pid,) = self._alloc_pages(1)
+            new_pages.append((p, pid))
+            return pid
+
+        try:
+            self.prefix_cache.insert(prompt[: n_full * ps], make_page)
+        except ArenaOutOfPages:
+            pass  # partial commit: attached nodes all have ids in new_pages
+        if new_pages:
+            start = new_pages[0][0]
+            ids = [pid for _, pid in new_pages]
+            self.arena.save_rows(self.caches, slot, ids, start_page=start)
+
+    # ------------------------------------------------------------------ #
+    # admission
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> RequestStream:
+        """Enqueue a request; returns its stream immediately."""
+        stream = RequestStream(req)
+        self.streams[req.rid] = stream
+        if len(req.prompt) > self.scfg.max_len - 1:
+            stream.finish("rejected")
+            return stream
+        self.queue.push(req)
+        return stream
+
+    def _admit_fresh(self, reqs: List[Request], lb: int,
+                     lanes: List[int]) -> None:
+        """Admit one length bucket of fresh requests: prefix-match each,
+        then prefill sub-groups that share a matched length (identical
+        chunk schedules) as one padded lane batch."""
+        ps, S, W = self.scfg.page_size, self.scfg.num_slots, self.scfg.max_len
+        groups: Dict[int, List[Request]] = {}
+        matches: Dict[int, tuple] = {}
+        for r in reqs:
+            if self.prefix_cache is not None:
+                m, ids = self.prefix_cache.acquire(r.prompt)
+            else:
+                m, ids = 0, []
+            matches[r.rid] = (m, ids)
+            groups.setdefault(m, []).append(r)
+
+        for m, group in groups.items():
+            n = len(group)
+            R = 1
+            while R < n:
+                R *= 2
+            R = min(R, S)
+            gl, lanes = lanes[:n], lanes[n:]
+            slots_arr = jnp.asarray(
+                np.concatenate([gl, np.full(R - n, S)]).astype(np.int32))
+            batch = np.zeros((R, lb), np.int32)
+            lane_budget = np.full(R, 1, np.int32)
+            lane_temp = np.zeros(R, np.float32)
+            for j, r in enumerate(group):
+                batch[j, : len(r.prompt)] = r.prompt
+                lane_budget[j] = min(r.max_new, self.scfg.max_new, W - lb)
+                lane_temp[j] = r.temperature
+                self.prompt_tokens += len(r.prompt)
+                self.streams[r.rid].matched_prefix_tokens = m
+            req_keys = jnp.stack(
+                [jax.random.fold_in(self._base_key, group[j].seed)
+                 if j < n else self._base_key for j in range(R)])
+
+            rows = self.model.init_caches(R, W)
+            if m:
+                tables = np.stack(
+                    [matches[r.rid][1] for r in group]
+                    + [matches[group[0].rid][1]] * (R - n))
+                rows = self.arena.load_rows(rows, np.arange(R), tables)
+            logits = None
+            for off in range(m, lb, ps):
+                logits, rows = self._chunk_fn(R, off)(
+                    self._params, jnp.asarray(batch[:, off:off + ps]), rows)
+                self.prefill_chunks += 1
+            (self.caches, self.cur_tok, self.cache_len, self.resp_len,
+             self.done, self.budget, self.temp, self.slot_keys,
+             self.out_tok, tok0, done0) = self._admit_fn(R)(
+                self._params, self.caches, rows, slots_arr, logits,
+                req_keys, jnp.full((R,), lb, jnp.int32),
+                jnp.asarray(lane_budget), jnp.asarray(lane_temp),
+                self.cur_tok, self.cache_len, self.resp_len, self.done,
+                self.budget, self.temp, self.slot_keys, self.out_tok)
+
+            tok0_h, done0_h = jax.device_get((tok0, done0))
+            when = self.now()
+            for j, r in enumerate(group):
+                st = self.streams[r.rid]
+                st.append([tok0_h[j]], when, self._weight_version)
+                self.total_tokens += 1
+                self.active[gl[j]] = _Active(r, st, flushed=1)
+                self._commit_prompt_pages(gl[j], r.prompt, m)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.release(r.prompt, m)
+                if done0_h[j]:
+                    reason = ("eos" if self.eos_id is not None
+                              and tok0_h[j] == self.eos_id else "budget")
+                    st.finish(reason)
+                    self.active[gl[j]] = None
+
+    def _resume_parked(self, items: List[_Parked], lanes: List[int]) -> None:
+        """Resume parked requests: pages back into slot rows, state back
+        into the slot arrays, zero recompute. Pages recycle immediately."""
+        for p, slot in zip(items, lanes):
+            self.caches = self.arena.load_rows(
+                self.caches, [slot], [p.page_ids])
+            self.arena.free(self.arena.unpark(p.req.rid))
+            req_key = jax.random.fold_in(self._base_key, p.req.seed)
+            s = jnp.asarray([slot], jnp.int32)
+            self.cur_tok = self.cur_tok.at[s].set(p.cur_tok)
+            self.cache_len = self.cache_len.at[s].set(p.cache_len)
+            self.resp_len = self.resp_len.at[s].set(p.resp_len)
+            self.done = self.done.at[s].set(False)
+            self.budget = self.budget.at[s].set(
+                p.resp_len + p.budget_left)
+            self.temp = self.temp.at[s].set(p.req.temperature)
+            self.slot_keys = self.slot_keys.at[s].set(req_key[None])
+            self.active[slot] = _Active(p.req, p.stream, flushed=p.resp_len)
+            self.resumes += 1
+
+    def _admit(self) -> None:
+        while len(self.queue):
+            # recompute each round: immediately-done admissions (EOS or a
+            # one-token budget on the first sample) free their lane again
+            free = [s for s in range(self.scfg.num_slots)
+                    if self.active[s] is None]
+            if not free:
+                return
+            kind, lb, items = self.queue.pop_work(len(free))
+            if kind == "parked":
+                self._resume_parked(items, free[: len(items)])
+            else:
+                self._admit_fresh(items, lb, free[: len(items)])
+
+    # ------------------------------------------------------------------ #
+    # the scheduler visit
+    # ------------------------------------------------------------------ #
+    def poll_weights(self) -> bool:
+        """Hot-swap to the newest published weights (between bursts; never
+        drops in-flight requests). Clears the prefix cache: cached KV is
+        scoped to the weight version that prefilled it."""
+        if (self.weight_store is None or not self.scfg.poll_weights
+                or self.weight_store.current is None
+                or self.weight_store.version <= self._weight_version):
+            return False
+        self._params = self.weight_store.current.params
+        self._weight_version = self.weight_store.version
+        self.weight_swaps += 1
+        if self.prefix_cache is not None:
+            self.arena.free(self.prefix_cache.clear())
+        return True
+
+    def _flush(self) -> None:
+        """One bundled host sync: stream new tokens, retire finished slots,
+        park over-quota slots when arrivals are waiting."""
+        done_h, resp_h, out_h, cur_h, clen_h, budget_h = jax.device_get(
+            (self.done, self.resp_len, self.out_tok, self.cur_tok,
+             self.cache_len, self.budget))
+        when = self.now()
+        quota = self.scfg.yield_quota
+        fresh_waiting = len(self.queue) - self.queue.num_parked
+        for s in range(self.scfg.num_slots):
+            a = self.active[s]
+            if a is None:
+                continue
+            n = int(resp_h[s])
+            new = out_h[s, a.flushed: n]
+            a.stream.append(new, when, self._weight_version)
+            self.total_tokens += len(new)
+            a.since_admit += len(new)
+            a.flushed = n
+            if done_h[s]:
+                last = a.stream.tokens[-1] if a.stream.tokens else None
+                reason = ("eos" if self.eos_id is not None
+                          and last == self.eos_id else "budget")
+                a.stream.finish(reason)
+                self.active[s] = None
+            elif quota and fresh_waiting > 0 and a.since_admit >= quota:
+                self._park(s, a, cur_h[s], clen_h[s], n, int(budget_h[s]))
+                fresh_waiting -= 1
+
+    def _park(self, slot: int, a: _Active, cur_tok: int, cache_len: int,
+              resp_len: int, budget: int) -> None:
+        """Fair-share preemption: save the slot's KV to pages, free the
+        slot, and re-queue the request as a parked continuation."""
+        ps = self.scfg.page_size
+        k = -(-int(cache_len) // ps)
+        try:
+            ids = self._alloc_pages(k)
+        except ArenaOutOfPages:
+            return  # pool full: keep decoding, park next visit
+        self.arena.save_rows(self.caches, slot, ids)
+        self.arena.park(a.req.rid, ids)
+        self.queue.push_parked(_Parked(
+            a.req, a.stream, ids, cache_len, resp_len, cur_tok,
+            budget - resp_len, self.now()))
+        self.done = self.done.at[slot].set(True)
+        self.active[slot] = None
+        self.parks += 1
+
+    def step(self) -> bool:
+        """One scheduler visit: poll weights, admit, decode, flush.
+        Returns True while any work remains (active or queued)."""
+        self.poll_weights()
+        self._admit()
+        if self.num_active:
+            (self.caches, self.cur_tok, self.cache_len, self.resp_len,
+             self.done, self.budget, self.temp, self.slot_keys,
+             self.out_tok, t, occ) = self._burst(
+                self._params, self.caches, self.cur_tok, self.cache_len,
+                self.resp_len, self.done, self.budget, self.temp,
+                self.slot_keys, self.out_tok)
+            self.bursts += 1
+            self.decode_steps += int(jax.device_get(t))
+            self.active_lane_steps += int(jax.device_get(occ))
+            self._flush()
+        return bool(self.num_active or len(self.queue))
+
+    def serve(self, requests: List[Request], *,
+              realtime: bool = True) -> List[RequestStream]:
+        """Drive a whole request stream to completion. ``requests`` carry
+        arrival offsets (seconds from call time); with ``realtime`` the
+        engine waits for arrivals, otherwise everything is enqueued up
+        front (max-pressure replay, arrival stamps kept for TTFT)."""
+        t_in = self.now()
+        pending = sorted(requests, key=lambda r: r.arrival)
+        for r in pending:
+            r.arrival += t_in
+        streams = [self.streams.get(r.rid) for r in pending]
+        i = 0
+        while i < len(pending) or self.num_active or len(self.queue):
+            while i < len(pending) and (
+                    not realtime or pending[i].arrival <= self.now()):
+                streams[i] = self.submit(pending[i])
+                i += 1
+            if not self.step() and i < len(pending) and realtime:
+                time.sleep(
+                    max(0.0, min(pending[i].arrival - self.now(), 0.01)))
+        return [self.streams[r.rid] for r in requests]
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> Dict[str, float]:
+        """Aggregate serving metrics over everything streamed so far."""
+        finished = [s for s in self.streams.values() if s.finished
+                    and s.finish_reason != "rejected"]
+        ttft = percentiles([s.ttft for s in finished])
+        tpot = percentiles([s.tpot for s in finished])
+        wall = self.now()
+        lane_steps = self.scfg.num_slots * self.decode_steps
+        hit_tokens = (self.prefix_cache.hit_tokens
+                      if self.prefix_cache else 0)
+        return {
+            "requests_finished": float(len(finished)),
+            "tokens": float(self.total_tokens),
+            "wall_s": wall,
+            "goodput_tokens_per_s": self.total_tokens / wall if wall else 0.0,
+            "ttft_p50_s": ttft["p50"],
+            "ttft_p99_s": ttft["p99"],
+            "tpot_p50_s": tpot["p50"],
+            "tpot_p99_s": tpot["p99"],
+            "prefix_hit_tokens": float(hit_tokens),
+            "prompt_tokens": float(self.prompt_tokens),
+            "prefix_hit_rate": (hit_tokens / self.prompt_tokens
+                                if self.prompt_tokens else 0.0),
+            "prefill_chunks": float(self.prefill_chunks),
+            "decode_steps": float(self.decode_steps),
+            "bursts": float(self.bursts),
+            "slot_occupancy": (self.active_lane_steps / lane_steps
+                               if lane_steps else 0.0),
+            "parks": float(self.parks),
+            "resumes": float(self.resumes),
+            "weight_swaps": float(self.weight_swaps),
+            "cached_pages": float(self.prefix_cache.num_pages
+                                  if self.prefix_cache else 0),
+            "pool_pages_used": float(self.arena.num_used),
+            "weight_version": float(self._weight_version),
+        }

@@ -1,0 +1,178 @@
+"""Paged KV arena: a block table over fixed-size KV pages.
+
+The continuous rollout engine's arena is strictly contiguous: ``num_slots``
+rows of width ``smax``, one live sequence per row, and a sequence's KV exists
+only while it holds a slot. That couples *residency* to *compute*: the total
+KV the system can hold is ``num_slots x smax`` tokens, a freed row's storage
+is recycled only at row granularity, and nothing can stay resident without
+occupying a decode lane.
+
+This module decouples the two, vLLM-style. KV storage is a pool of
+``num_pages`` fixed-size pages (``page_size`` tokens each); a logical
+sequence is a *block table* — an ordered list of page ids — and pages go
+back to the free list the moment their owner releases them. The serving
+engine uses the pool for everything that must be resident but is not
+decoding right now:
+
+  * **parked sequences** — fair-share preemption saves an in-flight
+    request's KV to pages and frees its slot; resuming scatters the pages
+    back and decoding continues with zero recompute;
+  * **shared-prefix cache entries** — committed prompt pages owned by the
+    radix cache (``serving/prefix_cache.py``), refcounted and LRU-evicted.
+
+Because the pool capacity is independent of the slot count, resident KV
+(parked + cached + staged) can outgrow ``num_slots x max_len`` — the block
+table, not the slot arena, is the system's memory ceiling.
+
+Compute still runs on the contiguous slot rows: pages are staged into a
+slot's rows before decode and gathered back out at page granularity
+(``lm.gather_cache_pages`` / ``lm.scatter_cache_pages``, the page-granular
+generalization of the row primitives). ROADMAP item 3's paged decode kernel
+reads the block table directly and removes the staging copy; the block-table
+bookkeeping here is already in its final shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.models import lm
+
+
+class ArenaOutOfPages(RuntimeError):
+    """Raised when an allocation cannot be satisfied even after eviction."""
+
+
+class PagedKVArena:
+    """Fixed-size page pool + free list + per-owner block tables.
+
+    The pool's device layout reuses the model's own cache constructor:
+    ``model.init_caches(num_pages, page_size)`` — each "batch row" of the
+    cache tree IS one page. Attention-only archs (every leaf carries the
+    token axis); the serving engine enforces that gate.
+    """
+
+    def __init__(self, model: Model, *, num_pages: int, page_size: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError(
+                f"need num_pages >= 1 and page_size >= 1, got "
+                f"{num_pages}/{page_size}")
+        self.model = model
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.pool = model.init_caches(num_pages, page_size)
+        self._free: List[int] = list(range(num_pages))
+        # owner tag -> block table (ordered page ids); owners are opaque
+        # host-side keys (request ids for parked sequences; the prefix cache
+        # keeps its own tables and only borrows alloc/free)
+        self.tables: Dict[object, List[int]] = {}
+        self._store_jit: Dict[int, callable] = {}
+        self._fetch_jit: Dict[int, callable] = {}
+
+    # ------------------------------------------------------------------ #
+    # free-list accounting
+    # ------------------------------------------------------------------ #
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` pages off the free list (raises ArenaOutOfPages)."""
+        if n > len(self._free):
+            raise ArenaOutOfPages(
+                f"need {n} pages, {len(self._free)} free of {self.num_pages}")
+        ids, self._free = self._free[:n], self._free[n:]
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        """Return pages to the free list — recycled immediately."""
+        for i in ids:
+            if not (0 <= i < self.num_pages):
+                raise ValueError(f"page id {i} out of range")
+        self._free.extend(ids)
+        assert len(self._free) <= self.num_pages, "double free"
+
+    # ------------------------------------------------------------------ #
+    # block-table ownership (parked sequences)
+    # ------------------------------------------------------------------ #
+    def park(self, owner, page_ids: List[int]) -> None:
+        assert owner not in self.tables, f"{owner!r} already parked"
+        self.tables[owner] = list(page_ids)
+
+    def unpark(self, owner) -> List[int]:
+        return self.tables.pop(owner)
+
+    # ------------------------------------------------------------------ #
+    # device copies: slot rows <-> pool pages
+    # ------------------------------------------------------------------ #
+    def _store_fn(self, start: int, k: int):
+        """jitted: copy pages [start, start+k) of one slot row into pool
+        pages (static start/k — the gather width is a compile-time shape)."""
+        fn = self._store_jit.get((start, k))
+        if fn is None:
+            model, ps = self.model, self.page_size
+
+            def store(pool, caches, slot, ids):
+                pages = model.gather_cache_pages(
+                    caches, slot, num_pages=start + k, page_size=ps)
+                pages = jax.tree.map(lambda pg: pg[:, :, start:], pages)
+                return jax.tree.map(
+                    lambda pl, pg: pl.at[:, ids].set(
+                        pg.astype(pl.dtype), mode="drop"),
+                    pool, pages)
+
+            fn = self._store_jit[(start, k)] = jax.jit(store)
+        return fn
+
+    def _fetch_fn(self, k: int):
+        """jitted: scatter k pooled pages per lane into slot rows [0, k*ps)."""
+        fn = self._fetch_jit.get(k)
+        if fn is None:
+            model = self.model
+
+            def fetch(pool, caches, slots, ids):
+                pages = jax.tree.map(
+                    lambda pl: jnp.take(pl, ids, axis=1), pool)
+                return model.scatter_cache_pages(caches, pages, slots)
+
+            fn = self._fetch_jit[k] = jax.jit(fetch)
+        return fn
+
+    def save_rows(self, caches, slot: int, page_ids: List[int],
+                  start_page: int = 0):
+        """Copy pages ``[start_page, start_page + len(page_ids))`` of slot
+        ``slot``'s rows into the pool at ``page_ids`` (page-granular gather
+        -> pool write). ``start_page > 0`` is the prefix-commit path: matched
+        pages are cache-owned and shared, so only the newly prefilled tail
+        pages are copied out."""
+        k = len(page_ids)
+        if k == 0:
+            return
+        self.pool = self._store_fn(start_page, k)(
+            self.pool, caches,
+            jnp.asarray([slot], jnp.int32),
+            jnp.asarray(np.asarray(page_ids, np.int32)[None, :]))
+
+    def load_rows(self, caches, slots: Sequence[int], page_tables):
+        """Scatter pooled pages into the arena rows at ``slots``: lane ``j``
+        gets ``page_tables[j]`` written contiguously from position 0. All
+        lanes must share a block-table length (the engine groups admissions
+        by matched-page count). Returns the updated caches."""
+        tables = np.asarray(page_tables, np.int32)
+        if tables.ndim != 2:
+            raise ValueError("page_tables must be (R, k)")
+        k = tables.shape[1]
+        if k == 0:
+            return caches
+        return self._fetch_fn(k)(
+            self.pool, caches,
+            jnp.asarray(np.asarray(slots, np.int32)),
+            jnp.asarray(tables))

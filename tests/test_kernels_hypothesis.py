@@ -170,3 +170,89 @@ def test_math_reward_host_and_token_paths_agree(rows, seed):
     got = math_reward_tokens(
         jnp.asarray(tokens), jnp.asarray(mask), jnp.asarray(answers), tok)
     np.testing.assert_allclose(np.asarray(got), want, atol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# serving: radix prefix-cache properties (host structure; no kernels, but the
+# same optional-hypothesis harness)
+# --------------------------------------------------------------------------- #
+@st.composite
+def radix_ops(draw):
+    ps = draw(st.sampled_from([2, 4]))
+    n_ops = draw(st.integers(1, 25))
+    ops = []
+    for _ in range(n_ops):
+        kind = draw(st.sampled_from(
+            ["insert", "insert", "match", "evict", "pin_evict"]))
+        seq = draw(st.lists(st.integers(0, 3), min_size=1,
+                            max_size=3 * ps + 1))
+        ops.append((kind, tuple(seq)))
+    return ps, ops
+
+
+@given(radix_ops())
+def test_radix_prefix_cache_properties(ops):
+    """Random op streams against a brute-force mirror of the live
+    page-aligned prefixes: `match` must return the LONGEST live page-aligned
+    strict prefix (and its exact page ids), refcounts stay >= 0, pinned
+    paths survive full eviction, and the trie's structural invariants hold
+    after every operation."""
+    from repro.serving import RadixPrefixCache
+
+    ps, op_list = ops
+    cache = RadixPrefixCache(page_size=ps)
+    live = {}  # path (tuple of page-tuples) -> page id
+    next_id = [0]
+
+    def pages_of(seq):
+        return tuple(tuple(seq[i * ps:(i + 1) * ps])
+                     for i in range(len(seq) // ps))
+
+    def ref_match(seq):
+        limit = max(0, len(seq) - 1) // ps
+        pgs = pages_of(seq)
+        for k in range(limit, 0, -1):
+            if pgs[:k] in live:
+                return k * ps, [live[pgs[:i + 1]] for i in range(k)]
+        return 0, []
+
+    def drop_freed(freed):
+        rev = {v: k for k, v in live.items()}
+        for pid in freed:
+            del live[rev[pid]]
+
+    for kind, seq in op_list:
+        if kind == "insert":
+            path = pages_of(seq)
+
+            def make_page(p):
+                pid = next_id[0]
+                next_id[0] += 1
+                live[path[: p + 1]] = pid
+                return pid
+
+            cache.insert(seq, make_page)
+        elif kind == "match":
+            got_m, got_ids = cache.match(seq)
+            want_m, want_ids = ref_match(seq)
+            assert got_m == want_m, "not the longest live prefix"
+            assert got_ids == want_ids, "wrong page ids for the match"
+            assert got_m <= max(0, len(seq) - 1), "full-prompt match leaked"
+        elif kind == "evict":
+            before = cache.num_pages
+            freed = cache.evict(1)
+            drop_freed(freed)
+            assert cache.num_pages == before - len(freed)
+        else:  # pin_evict: pinned paths survive a full eviction sweep
+            m, ids = cache.acquire(seq)
+            freed = cache.evict(cache.num_pages)
+            drop_freed(freed)
+            assert not set(freed) & set(ids), "evicted a pinned page"
+            again_m, again_ids = cache.match(seq)
+            assert (again_m, again_ids) == (m, ids), \
+                "pinned path lost by eviction"
+            cache.release(seq, m)
+        for n in cache._all_nodes():
+            assert n.refcount >= 0, "negative refcount"
+        cache.check_invariants()
+        assert cache.num_pages == len(live), "mirror drifted from trie"

@@ -202,6 +202,56 @@ def test_prompt_queue_single_bucket_is_lockstep_schedule():
     assert lb == 6 and idxs == [0, 1, 2, 3]
 
 
+def test_prompt_queue_no_fresh_starvation_under_cont_pressure():
+    """Regression: continuations used to be served unconditionally first,
+    so an env re-queueing one continuation per finished turn — i.e. refill
+    pressure exactly matching the pop rate — deferred fresh prompts
+    forever. The streak bound must serve a fresh bucket within
+    STARVATION_LIMIT + 1 pops no matter how fast continuations re-arrive."""
+    from repro.rl.rollout_engine import _Continuation
+
+    prompts = np.full((4, 8), 7, np.int32)
+    q = PromptQueue(prompts, pad_id=0, bucket=4)
+    q.push(_Continuation(0, np.array([5, 6]), None, 8))
+    served_fresh_at = None
+    for i in range(2 * PromptQueue.STARVATION_LIMIT + 2):
+        kind, _, items = q.pop_work(2)
+        if kind == "prefill":
+            served_fresh_at = i
+            break
+        # adversary: replace every popped continuation immediately
+        for c in items:
+            q.push(_Continuation(c.row, c.feed, None, c.cache_len))
+    assert served_fresh_at is not None, "fresh prompts starved"
+    assert served_fresh_at <= PromptQueue.STARVATION_LIMIT
+
+
+def test_prompt_queue_small_bucket_not_deferred_indefinitely():
+    """Regression for the other starvation mode: fullest-bucket-first let a
+    small bucket's head wait out every larger bucket. With aging, the lone
+    short prompt must be served within a bounded number of pops even while
+    the big bucket still holds work; FIFO within each bucket throughout."""
+    prompts = np.zeros((12, 16), np.int32)
+    prompts[0, :2] = 7  # row 0: the lone 4-bucket prompt
+    for i in range(1, 12):
+        prompts[i, :14] = 7  # rows 1..11: one deep 16-bucket
+    q = PromptQueue(prompts, pad_id=0, bucket=4)
+    popped = []
+    for i in range(12):
+        if not len(q):
+            break
+        lb, idxs = q.pop(1)
+        popped.extend(idxs)
+        if 0 in idxs:
+            break
+    assert 0 in popped, "short-bucket prompt starved"
+    # the big bucket won the first STARVATION_LIMIT pops (fullest-first),
+    # then aging forced the short bucket through
+    assert popped.index(0) <= PromptQueue.STARVATION_LIMIT
+    big = [r for r in popped if r != 0]
+    assert big == sorted(big), "FIFO within a bucket must be preserved"
+
+
 def test_bucketed_prefill_trims_padding(tiny_model):
     """Variable-length prompts through length-bucketed prefill: every
     sequence completes in dataset order and the refill batches prefill

@@ -1,0 +1,292 @@
+"""Serving subsystem tests: bitwise prefix-cache hits, park/resume
+invariance, paged-arena roundtrips, admission ordering, and live weight
+hot-swap mid-stream."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ServingConfig, reduced
+from repro.distributed.weight_sync import WeightVersionStore
+from repro.models import get_model
+from repro.serving import (
+    AdmissionQueue,
+    ArenaOutOfPages,
+    PagedKVArena,
+    Request,
+    RequestStream,
+    ServingEngine,
+)
+
+PS = 8  # page size used throughout
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260, num_layers=2)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _scfg(**kw):
+    base = dict(num_slots=4, max_len=64, max_new=12, page_size=PS,
+                decode_burst=4)
+    base.update(kw)
+    return ServingConfig(**base)
+
+
+def _prompt(rng, n):
+    return rng.integers(3, 200, n).astype(np.int32)
+
+
+# --------------------------------------------------------------------------- #
+# config
+# --------------------------------------------------------------------------- #
+def test_serving_config_validation():
+    assert _scfg().pool_pages == 2 * 4 * (64 // PS)
+    with pytest.raises(ValueError):
+        _scfg(max_len=60)  # not a page multiple
+    with pytest.raises(ValueError):
+        _scfg(max_new=64)  # no prompt room left
+    with pytest.raises(ValueError):
+        _scfg(num_slots=0)
+
+
+# --------------------------------------------------------------------------- #
+# admission queue
+# --------------------------------------------------------------------------- #
+def test_admission_queue_fifo_and_oldest_head():
+    rng = np.random.default_rng(0)
+    q = AdmissionQueue(bucket=PS, max_len=64)
+    # bucket A gets rids 0,1; bucket B gets rid 2; then A gets rid 3
+    for rid, n in [(0, 5), (1, 6), (2, 12), (3, 7)]:
+        q.push(Request(rid=rid, prompt=_prompt(rng, n), max_new=4))
+    kind, lb, items = q.pop_work(2)
+    assert kind == "fresh" and lb == PS
+    assert [r.rid for r in items] == [0, 1], "FIFO within the bucket"
+    # bucket B's head (rid 2) is now older than A's head (rid 3)
+    _, lb2, items2 = q.pop_work(4)
+    assert lb2 == 2 * PS and [r.rid for r in items2] == [2]
+    _, _, items3 = q.pop_work(4)
+    assert [r.rid for r in items3] == [3]
+    assert len(q) == 0
+    with pytest.raises(IndexError):
+        q.pop_work(1)
+
+
+# --------------------------------------------------------------------------- #
+# paged arena
+# --------------------------------------------------------------------------- #
+def test_paged_arena_alloc_free_and_roundtrip(tiny_model):
+    cfg, model, params = tiny_model
+    arena = PagedKVArena(model, num_pages=6, page_size=PS)
+    a = arena.alloc(4)
+    assert arena.num_free == 2 and arena.num_used == 4
+    with pytest.raises(ArenaOutOfPages):
+        arena.alloc(3)
+    arena.free(a[:2])
+    assert arena.num_free == 4
+
+    # KV roundtrip: prefill a slot row, save 2 pages out, wipe, load back
+    caches = model.init_caches(2, 4 * PS)
+    toks = jnp.asarray(np.arange(2 * 2 * PS).reshape(2, 2 * PS) % 200 + 3)
+    _, rows = model.prefill_chunk(params, toks, model.init_caches(2, 4 * PS),
+                                  offset=0)
+    caches = model.scatter_cache_rows(caches, rows, jnp.asarray([0, 1]))
+    ids = arena.alloc(2)
+    arena.save_rows(caches, 1, ids)
+    wiped = jax.tree.map(jnp.zeros_like, caches)
+    loaded = jax.tree.map(jnp.copy, wiped)
+    loaded = arena.load_rows(loaded, [0], [ids])
+    got = model.gather_cache_pages(loaded, jnp.asarray([0]),
+                                   num_pages=2, page_size=PS)
+    want = model.gather_cache_pages(caches, jnp.asarray([1]),
+                                    num_pages=2, page_size=PS)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# --------------------------------------------------------------------------- #
+# bitwise prefix-cache contract
+# --------------------------------------------------------------------------- #
+def test_prefix_hit_bitwise_identical_to_cold(tiny_model):
+    """The tentpole contract: a request admitted over a prefix-cache hit
+    must produce byte-for-byte the tokens it produces on a cold engine with
+    the cache disabled. Same per-request seed, different cache states."""
+    cfg, model, params = tiny_model
+    rng = np.random.default_rng(7)
+    prefix = _prompt(rng, 3 * PS)
+    prompt = np.concatenate([prefix, _prompt(rng, 5)])
+
+    cold = ServingEngine(model, _scfg(prefix_cache=False), params=params,
+                         eos_id=2)
+    s_cold = cold.serve([Request(rid=0, prompt=prompt, max_new=12, seed=42)],
+                        realtime=False)[0]
+
+    warm = ServingEngine(model, _scfg(), params=params, eos_id=2)
+    sibling = np.concatenate([prefix, _prompt(rng, 7)])
+    warm.serve([Request(rid=1, prompt=sibling, max_new=4, seed=9)],
+               realtime=False)
+    s_warm = warm.serve([Request(rid=0, prompt=prompt, max_new=12, seed=42)],
+                        realtime=False)[0]
+
+    assert s_warm.matched_prefix_tokens == 3 * PS, "hit expected"
+    assert s_cold.matched_prefix_tokens == 0
+    assert s_warm.tokens == s_cold.tokens, "prefix hit changed the output"
+    warm.prefix_cache.check_invariants()
+
+
+def test_full_prompt_match_still_computes_last_chunk(tiny_model):
+    """A prompt whose every page is cached must still prefill its final
+    page: the first sampled token needs fresh last-position logits."""
+    cfg, model, params = tiny_model
+    rng = np.random.default_rng(3)
+    prompt = _prompt(rng, 2 * PS)  # exactly 2 pages, no tail
+    eng = ServingEngine(model, _scfg(), params=params, eos_id=2)
+    a = eng.serve([Request(rid=0, prompt=prompt, max_new=4, seed=5)],
+                  realtime=False)[0]
+    chunks_cold = eng.prefill_chunks
+    b = eng.serve([Request(rid=1, prompt=prompt, max_new=4, seed=5)],
+                  realtime=False)[0]
+    assert b.matched_prefix_tokens == PS, "match capped below full prompt"
+    assert eng.prefill_chunks == chunks_cold + 1, "one chunk recomputed"
+    assert a.tokens == b.tokens, "same seed, same prompt, same tokens"
+
+
+def test_park_resume_and_placement_invariance(tiny_model):
+    """yield_quota parks a long request under queue pressure; its resumed
+    stream must be identical to the uncontended run — decoding is invariant
+    to slot placement, co-residents, and park/resume timing."""
+    cfg, model, params = tiny_model
+    rng = np.random.default_rng(11)
+    prompt = _prompt(rng, 10)
+    solo = ServingEngine(model, _scfg(prefix_cache=False), params=params,
+                         eos_id=2)
+    s_solo = solo.serve([Request(rid=0, prompt=prompt, max_new=12, seed=1)],
+                        realtime=False)[0]
+
+    cont = ServingEngine(
+        model, _scfg(num_slots=2, decode_burst=2, yield_quota=3,
+                     prefix_cache=False), params=params, eos_id=2)
+    reqs = [Request(rid=0, prompt=prompt, max_new=12, seed=1)] + [
+        Request(rid=i, prompt=_prompt(rng, 9), max_new=12, seed=i)
+        for i in range(1, 6)]
+    s_cont = cont.serve(reqs, realtime=False)[0]
+    assert cont.parks > 0, "contention must actually park something"
+    assert cont.resumes == cont.parks
+    assert s_cont.tokens == s_solo.tokens, "park/resume changed the output"
+    assert cont.arena.num_used == 0, "parked pages must all recycle"
+
+
+def test_resident_kv_outgrows_slot_arena(tiny_model):
+    """The paged pool decouples residency from compute: cached prefixes +
+    parked sequences can exceed num_slots x max_len worth of KV."""
+    cfg, model, params = tiny_model
+    scfg = _scfg(num_slots=1, max_len=32, max_new=4)
+    assert scfg.pool_pages * PS > scfg.num_slots * scfg.max_len
+    eng = ServingEngine(model, _scfg(num_slots=1, max_len=32, max_new=4),
+                        params=params, eos_id=2)
+    rng = np.random.default_rng(5)
+    # distinct prompts, each committing 2 pages to the cache
+    reqs = [Request(rid=i, prompt=_prompt(rng, 2 * PS + 3), max_new=2)
+            for i in range(4)]
+    eng.serve(reqs, realtime=False)
+    slot_capacity_pages = (eng.scfg.num_slots * eng.scfg.max_len) // PS
+    assert eng.arena.num_used > slot_capacity_pages, \
+        "resident cached KV should exceed the whole slot arena"
+    eng.prefix_cache.check_invariants()
+
+
+def test_rejected_and_finish_reasons(tiny_model):
+    cfg, model, params = tiny_model
+    eng = ServingEngine(model, _scfg(), params=params, eos_id=2)
+    rng = np.random.default_rng(9)
+    too_long = eng.submit(Request(rid=0, prompt=_prompt(rng, 64), max_new=4))
+    assert too_long.finished and too_long.finish_reason == "rejected"
+    ok = eng.serve([Request(rid=1, prompt=_prompt(rng, 6), max_new=3)],
+                   realtime=False)[0]
+    assert ok.finished and ok.finish_reason in ("eos", "budget")
+    assert len(ok.tokens) <= 3
+    assert ok.ttft is not None and ok.ttft >= 0
+
+
+# --------------------------------------------------------------------------- #
+# live weight hot-swap
+# --------------------------------------------------------------------------- #
+def test_hot_swap_mid_stream_keeps_streams_intact(tiny_model):
+    """Publishing new weights mid-decode must not drop or restart in-flight
+    requests: the stream keeps growing across the swap, token count hits
+    the budget exactly, and version tags are monotone with one segment per
+    version actually decoded under."""
+    cfg, model, params = tiny_model
+    p1 = model.init(jax.random.PRNGKey(1))
+    store = WeightVersionStore()
+    store.publish(params)
+    eng = ServingEngine(model, _scfg(num_slots=2, max_new=24, decode_burst=2),
+                        weight_store=store, eos_id=None)
+    rng = np.random.default_rng(3)
+    stream = eng.submit(Request(rid=0, prompt=_prompt(rng, 10), max_new=24))
+    for _ in range(3):
+        eng.step()
+    before_swap = list(stream.tokens)
+    assert 0 < len(before_swap) < 24, "swap must land mid-stream"
+    store.publish(p1)
+    while eng.step():
+        pass
+    assert stream.finished and len(stream.tokens) == 24
+    assert stream.tokens[: len(before_swap)] == before_swap, \
+        "swap must not rewrite already-streamed tokens"
+    assert eng.weight_swaps == 1
+    versions = stream.weight_versions
+    assert versions == sorted(versions), "version tags must be monotone"
+    assert len(set(versions)) == 2, "both versions must appear"
+    # the version store refuses regressions outright
+    with pytest.raises(ValueError):
+        store.publish(params, version=0)
+
+
+def test_hot_swap_clears_prefix_cache(tiny_model):
+    """Cached pages are weight-version-scoped: after a swap, a previously
+    cached prompt must miss (its KV under the old weights is invalid)."""
+    cfg, model, params = tiny_model
+    p1 = model.init(jax.random.PRNGKey(1))
+    store = WeightVersionStore()
+    store.publish(params)
+    eng = ServingEngine(model, _scfg(), weight_store=store, eos_id=2)
+    rng = np.random.default_rng(8)
+    prompt = _prompt(rng, 2 * PS + 4)
+    eng.serve([Request(rid=0, prompt=prompt, max_new=2)], realtime=False)
+    assert eng.prefix_cache.num_pages > 0
+    store.publish(p1)
+    s = eng.serve([Request(rid=1, prompt=prompt, max_new=2)],
+                  realtime=False)[0]
+    assert s.matched_prefix_tokens == 0, "stale-version page served"
+    assert eng.prefix_cache.num_pages > 0, "recommitted under new version"
+
+
+# --------------------------------------------------------------------------- #
+# stream bookkeeping
+# --------------------------------------------------------------------------- #
+def test_request_stream_metrics():
+    r = Request(rid=0, prompt=np.array([5, 6, 7]), max_new=8, arrival=1.0)
+    s = RequestStream(r)
+    assert s.ttft is None and s.tpot is None
+    s.append([11], 1.5, 0)
+    s.append([12, 13], 2.5, 1)
+    assert s.ttft == pytest.approx(0.5)
+    assert s.tpot == pytest.approx(0.5)  # (2.5 - 1.5) / 2
+    assert s.version_segments == [(0, 0), (1, 1)]
+    assert s.tokens == [11, 12, 13]
+    with pytest.raises(ValueError):
+        Request(rid=1, prompt=np.array([]), max_new=4)
+    with pytest.raises(ValueError):
+        Request(rid=2, prompt=np.array([5]), max_new=0)
+
+
+def test_engine_gates_unsupported_archs(tiny_model):
+    bad = reduced(ARCHS["mixtral-8x7b"], vocab_size=260, num_layers=2)
+    model = get_model(bad)
+    assert model.cfg.sliding_window is not None
+    with pytest.raises(ValueError, match="serving engine"):
+        ServingEngine(model, _scfg(), params={})
