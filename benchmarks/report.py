@@ -138,6 +138,45 @@ def multiturn_table() -> str:
     return "\n".join(out)
 
 
+def fleet_table() -> str:
+    """Render the committed simulated-fleet baseline (BENCH_fleet.json):
+    weak scaling over (pod, data, model) meshes, the file-plane gradient
+    exchange exact vs int8_ef, and compressed_psum fidelity."""
+    path = os.path.join(RESULTS, "BENCH_fleet.json")
+    if not os.path.exists(path):
+        return ""
+    r = json.load(open(path))
+    out = ["## Simulated fleet (docs/multihost.md; CPU device counts)\n",
+           "| devices | hosts | s/iter | per-device tok/s | retention "
+           "| controller bytes |",
+           "|---|---|---|---|---|---|"]
+    for p in r["weak_scaling"]:
+        out.append(
+            f"| {p['devices']} | {p['hosts']} | {p['s_per_iter']:.2f} "
+            f"| {p['per_device_tokens_per_s']:.1f} "
+            f"| {p['retention'] * 100:.1f}% | {p['controller_bytes']} |")
+    x = r["grad_exchange"]
+    out += [
+        f"\nDP gradient exchange ({x['hosts']} hosts, "
+        f"{x['params'] / 1e6:.1f}M params):\n",
+        "| arm | s/exchange | wire bytes | saved | rel err |",
+        "|---|---|---|---|---|",
+        f"| exact fp32 | {x['exact']['s_per_exchange']:.3f} "
+        f"| {x['exact']['wire_bytes_per_exchange']} | 0 | 0 (bitwise) |",
+        f"| int8_ef | {x['int8_ef']['s_per_exchange']:.3f} "
+        f"| {x['int8_ef']['wire_bytes_per_exchange']} "
+        f"| {x['int8_ef']['wire_saved_bytes_per_exchange']} "
+        f"({(1 - x['int8_ef']['wire_ratio']) * 100:.0f}%) "
+        f"| {x['int8_ef']['rel_err']:.2e} |",
+    ]
+    c = r["compressed_psum"]
+    out.append(
+        f"\ncompressed_psum over the pod axis ({c['devices']} devices, "
+        f"{c['hosts']} hosts): rel err {c['rel_err']:.2e} at "
+        f"{c['wire_ratio']:.3f}x the exact wire volume.")
+    return "\n".join(out)
+
+
 def main() -> None:
     import sys
 
@@ -145,6 +184,9 @@ def main() -> None:
     rt = rollout_table()
     if rt:
         print(rt + "\n")
+    ft = fleet_table()
+    if ft:
+        print(ft + "\n")
     sv = serving_table()
     if sv:
         print(sv + "\n")

@@ -29,6 +29,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ -n "${CI_CHUNKS:-}" ]]; then
   IFS=';' read -r -a CHUNKS <<<"$CI_CHUNKS"
   run_docs=0
+  run_fleet=0
 else
   # Chunks balanced by runtime: the learning/convergence tests, the
   # subprocess-heavy multidevice file, and the kernel sweeps dominate.
@@ -45,9 +46,18 @@ else
     "tests/test_algorithms.py tests/test_benchmarks.py tests/test_sharding.py tests/test_arch_smoke.py tests/test_workloads.py tests/test_envs.py"
   )
   run_docs=1
+  # The simulated-fleet suite (docs/multihost.md) gets its own chunk: it
+  # spawns multi-process fleets whose subprocesses each force their own
+  # XLA device count, so it must not share a pytest process with files
+  # that shape the parent's jax state. ~7 min under contention — near the
+  # cap, so it rides alone with its own XLA_FLAGS for the in-process
+  # device probes.
+  FLEET_CHUNK="tests/test_fleet.py"
+  FLEET_XLA_FLAGS="--xla_force_host_platform_device_count=8"
+  run_fleet=1
 
   # append any unlisted test file to the last chunk
-  listed=" ${CHUNKS[*]} "
+  listed=" ${CHUNKS[*]} $FLEET_CHUNK "
   extra=""
   for f in tests/test_*.py; do
     [[ "$listed" == *" $f "* ]] || extra="$extra $f"
@@ -59,7 +69,7 @@ else
 fi
 
 logdir="$(mktemp -d "${TMPDIR:-/tmp}/ci-logs.XXXXXX")"
-njobs=$((${#CHUNKS[@]} + run_docs))
+njobs=$((${#CHUNKS[@]} + run_docs + run_fleet))
 echo "[ci] $njobs parallel chunks; logs in $logdir"
 
 # Each chunk runs in a background subshell that records its own wall time;
@@ -80,6 +90,18 @@ for chunk in "${CHUNKS[@]}"; do
   pids+=($!)
   names+=("chunk$i")
 done
+if [[ $run_fleet -eq 1 ]]; then
+  (
+    t0=$(date +%s)
+    XLA_FLAGS="$FLEET_XLA_FLAGS" JAX_PLATFORMS=cpu \
+      python -m pytest -q $FLEET_CHUNK >"$logdir/fleet.log" 2>&1
+    rc=$?
+    echo $(($(date +%s) - t0)) >"$logdir/fleet.time"
+    exit $rc
+  ) &
+  pids+=($!)
+  names+=("fleet")
+fi
 if [[ $run_docs -eq 1 ]]; then
   (
     t0=$(date +%s)

@@ -29,6 +29,7 @@ from typing import Any, Dict, Optional, Tuple
 from repro.configs.base import (
     AsyncPipelineConfig,
     DataCoordinatorConfig,
+    DistributedConfig,
     EnvConfig,
     ModelConfig,
     RolloutEngineConfig,
@@ -59,6 +60,8 @@ class ExperimentSpec:
         default_factory=RolloutEngineConfig
     )
     env: EnvConfig = dataclasses.field(default_factory=EnvConfig)
+    # multi-host fleet (docs/multihost.md); None = single-host, the default
+    distributed: Optional[DistributedConfig] = None
     mesh_shape: Optional[Tuple[int, ...]] = None
     mesh_axes: Tuple[str, ...] = ("data", "model")
     prompts_per_iter: int = 8
@@ -85,6 +88,10 @@ class ExperimentSpec:
             "async_pipeline": dataclasses.asdict(self.async_pipeline),
             "rollout": dataclasses.asdict(self.rollout),
             "env": dataclasses.asdict(self.env),
+            "distributed": (
+                dataclasses.asdict(self.distributed)
+                if self.distributed is not None else None
+            ),
             "mesh_shape": list(self.mesh_shape) if self.mesh_shape else None,
             "mesh_axes": list(self.mesh_axes),
             "prompts_per_iter": self.prompts_per_iter,
@@ -103,6 +110,10 @@ class ExperimentSpec:
             async_pipeline=AsyncPipelineConfig(**d.get("async_pipeline", {})),
             rollout=RolloutEngineConfig(**d.get("rollout", {})),
             env=EnvConfig(**d.get("env", {})),
+            distributed=(
+                DistributedConfig(**d["distributed"])
+                if d.get("distributed") else None
+            ),
             mesh_shape=tuple(mesh_shape) if mesh_shape else None,
             mesh_axes=tuple(d.get("mesh_axes", ("data", "model"))),
             prompts_per_iter=d.get("prompts_per_iter", 8),
@@ -149,6 +160,7 @@ class ExperimentSpec:
             async_pipeline=self.async_pipeline,
             rollout=self.rollout,
             env=self.env,
+            distributed=self.distributed,
             registry=registry,
             algorithm=self.algorithm,
             seed=self.seed,

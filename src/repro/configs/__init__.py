@@ -1,6 +1,7 @@
 from repro.configs.base import (
     AsyncPipelineConfig,
     DataCoordinatorConfig,
+    DistributedConfig,
     EnvConfig,
     ModelConfig,
     RolloutEngineConfig,

@@ -442,6 +442,86 @@ class AsyncPipelineConfig:
 
 
 # --------------------------------------------------------------------------- #
+# Multi-host scale-out (paper §7.3: near-linear scaling to 512 GPUs —
+# repro.distributed.fleet, launch/mesh.make_fleet_mesh, docs/multihost.md).
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class DistributedConfig:
+    """Flags for multi-host execution (``repro.distributed.fleet``).
+
+    ``num_hosts=1`` (default) disables the subsystem entirely: no fleet
+    context, no gradient exchange, the pre-fleet single-process path
+    bit-for-bit. With ``num_hosts > 1`` every host process runs the
+    identical SPMD program over the global ``(pod, data, model)`` fleet
+    mesh and the DP gradient exchange crosses the ``coordinator`` data
+    plane: each host owns a contiguous slice of the flat gradient vector
+    (reduce-scatter shape; ownership map from ``ft.straggler.rebalance``
+    so a dead host's slices are re-assigned deterministically), publishes
+    it — raw fp32, or int8 blocks + scales with an error-feedback
+    accumulator when ``grad_compression="int8_ef"`` — and decodes every
+    peer's slices. See ``docs/multihost.md`` for the coordinator /
+    process-id contract and the CI fleet-simulation recipe.
+    """
+
+    # number of host processes in the fleet; 1 = subsystem off
+    num_hosts: int = 1
+    # this process's rank in [0, num_hosts)
+    process_id: int = 0
+    # local devices per host used for the fleet mesh's (data, model) plane;
+    # 0 = whatever the backend offers divided by num_hosts (CPU simulation:
+    # XLA_FLAGS=--xla_force_host_platform_device_count supplies them)
+    devices_per_host: int = 0
+    # data plane: a directory path (CPU-simulated file plane, the CI mode)
+    # or a host:port coordinator address (jax.distributed on real fleets)
+    coordinator: str = ""
+    # DP gradient exchange encoding: "none" = raw fp32 slices (bitwise-
+    # identical to single-host — test-asserted); "int8_ef" = per-block int8
+    # + fp32 scales with error feedback (repro.distributed.compression)
+    grad_compression: str = "none"
+    # seconds a host waits for peers' exchange slices before consulting the
+    # heartbeat monitor for dead hosts
+    exchange_timeout_s: float = 60.0
+    # iterations a host may lag the heartbeat monitor before it is declared
+    # dead (ft.straggler.HeartbeatMonitor patience)
+    heartbeat_patience: int = 2
+    # wall-clock heartbeat staleness (seconds) that also declares a host
+    # dead — catches a host killed after its last in-iteration beat
+    dead_after_s: float = 30.0
+
+    def __post_init__(self):
+        if self.num_hosts < 1:
+            raise ValueError(f"num_hosts must be >= 1, got {self.num_hosts}")
+        if not 0 <= self.process_id < self.num_hosts:
+            raise ValueError(
+                f"process_id must be in [0, {self.num_hosts}), "
+                f"got {self.process_id}")
+        if self.devices_per_host < 0:
+            raise ValueError(
+                f"devices_per_host must be >= 0, got {self.devices_per_host}")
+        if self.grad_compression not in ("none", "int8_ef"):
+            raise ValueError(
+                f"grad_compression must be 'none' or 'int8_ef', "
+                f"got {self.grad_compression!r}")
+        if self.num_hosts > 1 and not self.coordinator:
+            raise ValueError("num_hosts > 1 needs a coordinator (a shared "
+                             "directory for the CPU-simulated data plane, or "
+                             "a host:port address on real fleets)")
+        if self.exchange_timeout_s <= 0:
+            raise ValueError(f"exchange_timeout_s must be > 0, "
+                             f"got {self.exchange_timeout_s}")
+        if self.heartbeat_patience < 1:
+            raise ValueError(f"heartbeat_patience must be >= 1, "
+                             f"got {self.heartbeat_patience}")
+        if self.dead_after_s <= 0:
+            raise ValueError(
+                f"dead_after_s must be > 0, got {self.dead_after_s}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_hosts > 1
+
+
+# --------------------------------------------------------------------------- #
 # Input shapes (assigned): every LM arch carries the same four shape cells.
 # --------------------------------------------------------------------------- #
 @dataclass(frozen=True)

@@ -35,14 +35,25 @@ class BufferStats:
     redistributions: int = 0
     bytes_moved: int = 0  # bytes crossing device boundaries in redistributions
     bytes_through_controller: int = 0  # always 0 for the distributed buffer
+    # per-destination-HOST inbound bytes of those redistributions (host index
+    # from the mesh's pod axis / device process): the cross-host-awareness
+    # invariant is that no host ever stages the full global array — its
+    # inbound volume is only its own destination shards (tests/test_fleet.py
+    # asserts max_host_inbound_bytes << the centralized all-to-one volume)
+    host_inbound_bytes: Dict[int, int] = field(default_factory=dict)
     # double-buffer accounting (DoubleBufferedDatabuffer only):
     overlap_hits: int = 0  # gets served by a reshard issued ahead of time
     sync_waits: int = 0  # gets that had to issue the reshard on the spot
     rotations: int = 0  # iteration boundaries (slot swaps)
 
+    @property
+    def max_host_inbound_bytes(self) -> int:
+        return max(self.host_inbound_bytes.values(), default=0)
+
     def reset(self):
         self.puts = self.fast_path_hits = self.redistributions = 0
         self.bytes_moved = self.bytes_through_controller = 0
+        self.host_inbound_bytes = {}
         self.overlap_hits = self.sync_waits = self.rotations = 0
 
 
@@ -53,6 +64,14 @@ class DistributedDatabuffer:
         self.mesh = mesh
         self._store: Dict[str, jax.Array] = {}
         self.stats = BufferStats()
+        # device id -> host row, from the mesh's pod axis (fleet meshes) or
+        # the devices' process index (real multi-host); flat local mesh = 1
+        from repro.distributed.fleet import host_device_groups
+
+        self._dev_host = {
+            d: h for h, devs in enumerate(host_device_groups(mesh))
+            for d in devs
+        }
 
     # ------------------------------------------------------------------ #
     def put(self, key: str, value: jax.Array, spec: Optional[P] = None) -> None:
@@ -79,7 +98,7 @@ class DistributedDatabuffer:
             return value
         target = NamedSharding(self.mesh, spec)
         self.stats.redistributions += 1
-        self.stats.bytes_moved += _resharding_bytes(value, target)
+        self._account_reshard(value, target)
         return jax.device_put(value, target)  # GSPMD all-to-all among peers
 
     def keys(self):
@@ -90,6 +109,61 @@ class DistributedDatabuffer:
 
     def clear(self) -> None:
         self._store.clear()
+
+    # ------------------------------------------------------------------ #
+    def _account_reshard(self, value: jax.Array, target: NamedSharding) -> None:
+        """Charge one redistribution's traffic to its destination hosts.
+
+        For each destination device, the bytes of its target index slice are
+        charged to that device's host — deduped per (host, slice) so model-
+        axis replicas on the same host count once, and skipped entirely when
+        the identical slice is already resident on that host under the
+        source sharding (no inter-host traffic for data that never leaves).
+        This is exactly the "stage per-host destination shards only"
+        property: no host's inbound volume ever approaches the full global
+        array, unlike the centralized baseline's all-to-one gather.
+        """
+        item = value.dtype.itemsize
+
+        def slice_bytes(index) -> int:
+            n = item
+            for sl, dim in zip(index, value.shape):
+                start, stop, _ = sl.indices(dim)
+                n *= max(stop - start, 0)
+            return n
+
+        def key_of(index) -> tuple:
+            return tuple(sl.indices(dim)
+                         for sl, dim in zip(index, value.shape))
+
+        try:
+            tmap = target.devices_indices_map(value.shape)
+            sh = getattr(value, "sharding", None)
+            smap = (sh.devices_indices_map(value.shape)
+                    if sh is not None else {})
+        except (TypeError, ValueError, AttributeError):
+            self.stats.bytes_moved += value.size * item  # conservative
+            return
+        resident: Dict[int, set] = {}
+        for d, idx in smap.items():
+            resident.setdefault(
+                self._dev_host.get(d.id, 0), set()).add(key_of(idx))
+        seen: Dict[int, set] = {}
+        moved = 0
+        for d, idx in tmap.items():
+            h = self._dev_host.get(d.id, 0)
+            k = key_of(idx)
+            if k in seen.setdefault(h, set()):
+                continue  # replicated copy on the same host: one transfer
+            seen[h].add(k)
+            if k in resident.get(h, set()):
+                continue  # already resident on this host
+            b = slice_bytes(idx)
+            moved += b
+            self.stats.host_inbound_bytes[h] = (
+                self.stats.host_inbound_bytes.get(h, 0) + b
+            )
+        self.stats.bytes_moved += moved
 
     # ------------------------------------------------------------------ #
     def _matches(self, value: jax.Array, spec: P) -> bool:
@@ -111,15 +185,6 @@ def _normalize(spec: P, ndim: int) -> tuple:
             p = p[0] if len(p) == 1 else p
         out.append(p)
     return tuple(out)
-
-
-def _resharding_bytes(value: jax.Array, target: NamedSharding) -> int:
-    """Upper-bound estimate of bytes crossing devices for value -> target:
-    every byte not already resident at its destination must move once."""
-    total = value.size * value.dtype.itemsize
-    # fraction resident: for a pure DP-degree change over the same axis order,
-    # each destination shard overlaps its source shard by min(dp_a, dp_b)/max.
-    return int(total)
 
 
 class DoubleBufferedDatabuffer(DistributedDatabuffer):
@@ -201,7 +266,7 @@ class DoubleBufferedDatabuffer(DistributedDatabuffer):
                 continue
             target = NamedSharding(self.mesh, spec)
             self.stats.redistributions += 1
-            self.stats.bytes_moved += _resharding_bytes(value, target)
+            self._account_reshard(value, target)
             # async dispatch: returns immediately, transfer overlaps compute
             self._staged[(key, norm)] = jax.device_put(value, target)
 
@@ -221,7 +286,7 @@ class DoubleBufferedDatabuffer(DistributedDatabuffer):
         self.stats.sync_waits += 1
         target = NamedSharding(self.mesh, spec)
         self.stats.redistributions += 1
-        self.stats.bytes_moved += _resharding_bytes(value, target)
+        self._account_reshard(value, target)
         out = jax.device_put(value, target)
         self._staged[(key, norm)] = out  # serve repeat gets from the cache
         return out
@@ -265,6 +330,11 @@ class CentralizedDatabuffer(DistributedDatabuffer):
         host_value = jax.device_get(value)  # gather to the controller
         nbytes = host_value.size * host_value.dtype.itemsize
         self.stats.bytes_through_controller += nbytes
+        # the whole array lands on the controller host — the inbound-volume
+        # contrast with the distributed buffer's per-host shards
+        self.stats.host_inbound_bytes[0] = (
+            self.stats.host_inbound_bytes.get(0, 0) + nbytes
+        )
         self._host_store = getattr(self, "_host_store", {})
         self._host_store[key] = host_value
         self.controller_resident_bytes = max(

@@ -26,6 +26,7 @@ from jax.sharding import Mesh
 from repro.configs.base import (
     AsyncPipelineConfig,
     DataCoordinatorConfig,
+    DistributedConfig,
     EnvConfig,
     ModelConfig,
     RolloutEngineConfig,
@@ -159,6 +160,7 @@ def build_pipeline(
     async_pipeline: Optional[AsyncPipelineConfig] = None,
     rollout: Optional[RolloutEngineConfig] = None,
     env: Optional[EnvConfig] = None,
+    distributed: Optional[DistributedConfig] = None,
     registry: Optional[Registry] = None,
     algorithm=None,
     seed: int = 0,
@@ -168,6 +170,24 @@ def build_pipeline(
 
     spec = algorithm or algorithms.get_algorithm(rl.algorithm)
     coordinator = coordinator or DataCoordinatorConfig()
+    if distributed is not None and distributed.enabled:
+        if centralized:
+            raise ValueError(
+                "a multi-host fleet has no single controller to centralize "
+                "through; distributed cannot be combined with centralized=True"
+            )
+        if async_pipeline is not None and async_pipeline.enabled:
+            raise ValueError(
+                "the fleet gradient exchange is a per-iteration collective; "
+                "combine it with the async pipeline once the exchange is "
+                "staleness-aware (not yet supported)"
+            )
+        if mesh is None:
+            from repro.launch.mesh import make_fleet_mesh
+
+            mesh = make_fleet_mesh(
+                distributed.num_hosts, distributed.devices_per_host
+            )
     if mesh is None:
         from repro.launch.mesh import make_compat_mesh
 
@@ -213,6 +233,25 @@ def build_pipeline(
     if spec.uses_critic:
         ctx.critic_state = trainer.init_state(critic_mod.init(cfg, k_critic))
     ctx.env = env_runtime
+
+    if distributed is not None and distributed.enabled:
+        # Fleet DP gradient exchange: split the fused actor step so the
+        # gradient crosses the host data plane between grad and apply —
+        # bitwise-equivalent to the fused step when grad_compression="none"
+        # (tests/test_fleet.py), genuinely int8 on the wire otherwise.
+        from repro.distributed import fleet as fleet_mod
+
+        fleet_ctx = fleet_mod.ensure_context(distributed)
+        exchange = fleet_mod.GradExchange(
+            fleet_ctx, distributed.grad_compression
+        )
+        ctx.engines["actor_step"] = fleet_mod.fleet_actor_step(
+            jax.jit(trainer.make_actor_grad_fn(model, rl, algorithm=spec)),
+            jax.jit(trainer.make_actor_apply_fn(rl)),
+            exchange,
+        )
+        ctx.fleet = fleet_ctx
+        ctx.grad_exchange = exchange
 
     dag = dag or spec.dag_factory()
     if env_runtime is not None:

@@ -177,8 +177,14 @@ class DAGWorker:
         # keeps a misconfigured num_buckets from disabling balancing invisibly.
         if B % g or (B // g) % nb:
             return skipped
+        # fleet meshes balance hierarchically: bin within a host first, swap
+        # across the slow pod axis only when host totals exceed tolerance
+        H = dict(self.ctx.mesh.shape).get("pod", 1)
+        hier = H > 1 and nb % H == 0 and (B // g) % H == 0
         before = straggler.bucket_token_ratio(lengths, nb)
-        perm = straggler.balance_by_length(lengths, nb, group_size=g)
+        perm = straggler.balance_by_length(
+            lengths, nb, group_size=g, hosts=H if hier else 1
+        )
         after = straggler.bucket_token_ratio(lengths, nb, perm)
         if after < before:  # only repack when it helps
             dperm = jnp.asarray(perm)
@@ -191,7 +197,7 @@ class DAGWorker:
                     spec = getattr(value.sharding, "spec", None)
                     self.buffer.put(key, jnp.take(value, dperm, axis=0), spec)
         achieved = min(after, before)
-        return {
+        out = {
             "balance/token_ratio_before": before,
             "balance/token_ratio_after": achieved,
             "balance/repacked": float(after < before),
@@ -201,3 +207,8 @@ class DAGWorker:
                 achieved > self.coordinator.balance_tolerance
             ),
         }
+        if hier:
+            out["balance/cross_host_row_moves"] = float(
+                straggler.cross_host_rows(perm, H) if after < before else 0
+            )
+        return out

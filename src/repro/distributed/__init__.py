@@ -1,1 +1,1 @@
-from repro.distributed import collectives, compression, sharding
+from repro.distributed import collectives, compression, fleet, sharding

@@ -6,18 +6,34 @@ all_gather(quantized + scales) -> local dequantize-sum. Wire bytes drop to
 feedback accumulator (``ef_update``) keeps the bias bounded, which is the
 standard trick that makes low-bit gradient exchange trainable.
 
-Used opt-in by wrapping the grad computation in ``shard_map`` over the data
-axes; the dense pjit path keeps exact reductions.
+Two call sites use these primitives:
+
+* ``compressed_psum`` — inside ``shard_map`` over the data/pod axes of an
+  in-process fleet mesh (the dense pjit path keeps exact reductions).
+* ``encode``/``decode`` — the wire form of the multi-host DP gradient
+  exchange (``repro.distributed.fleet.GradExchange``): each host publishes
+  the int8 blocks + fp32 scales of its owned gradient slice and every peer
+  decodes them, which is exactly the all-gather + local-dequantize shape of
+  ``compressed_psum`` routed over the fleet's data plane.
+
+``wire_bytes`` is the byte accounting both paths report: the padded int8
+block payload plus one fp32 scale per block — byte-exact for what
+``_quantize`` actually puts on the wire, for any input dtype.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 BLOCK = 256  # quantization block (per-block scale)
+
+
+def num_blocks(size: int) -> int:
+    """Quantization blocks covering ``size`` elements (>= 1: the empty
+    array still ships one scale so the wire format is self-describing)."""
+    return max((size + BLOCK - 1) // BLOCK, 1)
 
 
 def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -53,8 +69,34 @@ def ef_update(grad: jax.Array, error: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return decoded.astype(grad.dtype), new_error
 
 
+def encode(x: jax.Array, error=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Wire form of one gradient slice: ``(q, scale, new_error)``.
+
+    With ``error`` (the error-feedback accumulator, fp32, same shape) the
+    residual of the previous rounds is folded in before quantizing and the
+    new residual is returned — ``decode(q, scale, ...)`` on the receiver
+    then telescopes to the true gradient sum over time (the property the
+    hypothesis suite asserts). ``error=None`` encodes memorylessly."""
+    target = x.astype(jnp.float32)
+    if error is not None:
+        target = target + error
+    q, scale = _quantize(target)
+    new_error = target - _dequantize(q, scale, target.shape, target.size)
+    return q, scale, new_error
+
+
+def decode(q: jax.Array, scale: jax.Array, shape, size) -> jax.Array:
+    """Inverse of :func:`encode` (up to quantization error)."""
+    return _dequantize(q, scale, shape, size)
+
+
 def wire_bytes(x: jax.Array) -> Tuple[int, int]:
-    """(exact fp32 bytes, compressed bytes) for one all-reduce of ``x``."""
-    exact = x.size * 4
-    comp = x.size * 1 + (x.size // BLOCK + 1) * 4
+    """(exact bytes, compressed bytes) for one exchange of ``x``.
+
+    Exact is the raw payload at the array's own dtype width; compressed is
+    byte-exact for the ``_quantize`` wire format: ``num_blocks * BLOCK``
+    padded int8 lanes plus one fp32 scale per block."""
+    exact = x.size * x.dtype.itemsize
+    nb = num_blocks(x.size)
+    comp = nb * BLOCK * 1 + nb * 4
     return exact, comp

@@ -58,6 +58,8 @@ def balance_by_length(
     *,
     group_size: int = 1,
     capacities: Optional[Sequence[int]] = None,
+    hosts: int = 1,
+    inter_host_tolerance: float = 1.25,
 ) -> np.ndarray:
     """Length-aware load balancing (paper §6.2): permutation repacking a
     variable-length batch into ``num_buckets`` equal-row, near-equal-TOKEN
@@ -77,6 +79,19 @@ def balance_by_length(
     skew capacity toward fast hosts (the two mitigations compose: rebalance
     decides WHO loads how much, balance_by_length decides WHICH sequences).
 
+    ``hosts > 1`` enables the **hierarchical mode** for multi-host fleet
+    meshes (docs/multihost.md): rows start resident on the host that
+    generated them (host h owns the contiguous block of ``n/hosts`` rows),
+    and moving a token across the inter-pod links is far more expensive
+    than moving it between a host's local devices. So groups are first
+    binned *within* their resident host's local buckets; only when the
+    per-host token totals exceed ``inter_host_tolerance`` x mean are
+    equal-row-count group *swaps* made across the pod axis (heaviest host
+    with lightest, the swap that best halves their gap), and the swap loop
+    stops the moment the totals are back under tolerance — the repack
+    permutation never crosses the slow axis unnecessarily. Count the
+    crossings with :func:`cross_host_rows`.
+
     Returns a permutation ``perm`` of ``len(lengths)`` row indices: bucket b
     owns rows ``perm[start_b : start_b + rows_b]``. Invert with
     :func:`inverse_permutation`.
@@ -87,6 +102,30 @@ def balance_by_length(
         raise ValueError(f"batch {n} not divisible by group_size {group_size}")
     n_groups = n // group_size
     gw = w.reshape(n_groups, group_size).sum(axis=1)
+
+    if hosts > 1:
+        if capacities is not None:
+            raise ValueError("hierarchical mode derives capacities from the "
+                             "host layout; pass capacities only with hosts=1")
+        if num_buckets % hosts or n_groups % hosts:
+            raise ValueError(
+                f"hierarchical mode needs buckets ({num_buckets}) and groups "
+                f"({n_groups}) divisible by hosts ({hosts})")
+        assign = _hierarchical_assign(gw, hosts, inter_host_tolerance)
+        local_buckets = num_buckets // hosts
+        perm = np.empty(n, dtype=np.int64)
+        pos = 0
+        for h in range(hosts):
+            sub = assign[h]  # group ids resident on host h after swaps
+            sub_perm = balance_by_length(
+                w.reshape(n_groups, group_size)[sub].reshape(-1),
+                local_buckets, group_size=group_size)
+            # sub_perm indexes into sub's rows; lift back to global rows
+            rows = (np.asarray(sub)[:, None] * group_size
+                    + np.arange(group_size)[None, :]).reshape(-1)
+            perm[pos : pos + len(rows)] = rows[sub_perm]
+            pos += len(rows)
+        return perm
 
     if capacities is None:
         base, extra = divmod(n_groups, num_buckets)
@@ -116,6 +155,64 @@ def balance_by_length(
     return perm
 
 
+def _hierarchical_assign(
+    gw: np.ndarray, hosts: int, tolerance: float
+) -> List[List[int]]:
+    """Group ids per host after cross-host swap migration.
+
+    Host h starts owning the contiguous block of ``n_groups/hosts`` groups
+    (residency). While ``max(host_tokens) / mean > tolerance``, swap one
+    group between the heaviest and lightest hosts — the pair whose exchange
+    best narrows their gap — so row counts per host never change (contiguous
+    DP shards need equal rows). Deterministic: ties break on group index,
+    and a swap is only taken if it strictly reduces the heavy host's total.
+    """
+    n_groups = len(gw)
+    per = n_groups // hosts
+    assign = [list(range(h * per, (h + 1) * per)) for h in range(hosts)]
+    totals = np.array([gw[a].sum() for a in assign])
+    mean = totals.mean()
+    if mean <= 0:
+        return assign
+    for _ in range(n_groups):  # bounded; each swap strictly reduces max
+        if totals.max() / mean <= tolerance:
+            break
+        hi = int(np.argmax(totals))
+        lo = int(np.argmin(totals))
+        gap = totals[hi] - totals[lo]
+        # best swap: heavy group out, light group in, moving ~gap/2
+        best = None
+        for i, ga in enumerate(assign[hi]):
+            for j, gb in enumerate(assign[lo]):
+                delta = gw[ga] - gw[gb]
+                if delta <= 0:
+                    continue
+                # post-swap gap magnitude; strict improvement required
+                score = abs(gap - 2 * delta)
+                if best is None or score < best[0]:
+                    best = (score, i, j, delta)
+        if best is None or best[0] >= gap:
+            break
+        _, i, j, delta = best
+        assign[hi][i], assign[lo][j] = assign[lo][j], assign[hi][i]
+        assign[hi].sort()
+        assign[lo].sort()
+        totals[hi] -= delta
+        totals[lo] += delta
+    return assign
+
+
+def cross_host_rows(perm: np.ndarray, hosts: int) -> int:
+    """Rows whose resident host (contiguous block of the ORIGINAL order)
+    differs from the host slot of their position in ``perm`` — the count of
+    rows the repack moves across the slow inter-pod axis."""
+    n = len(perm)
+    per = n // hosts
+    dest = np.arange(n) // per  # host slot of each perm position
+    src = np.asarray(perm) // per  # resident host of the row placed there
+    return int(np.sum(dest != src))
+
+
 def inverse_permutation(perm: np.ndarray) -> np.ndarray:
     """inv such that ``x[perm][inv] == x`` (restore original row order)."""
     inv = np.empty_like(perm)
@@ -139,17 +236,51 @@ def bucket_token_ratio(
 
 class HeartbeatMonitor:
     """Tracks last-seen iteration per host; hosts silent for ``patience``
-    iterations are declared dead (drives ``rebalance(dead=...)``)."""
+    iterations are declared dead (drives ``rebalance(dead=...)``).
+
+    A host that has NEVER beaten is dead at any query — ``last_seen`` starts
+    at -inf, not 0, so silence from the start is not mistaken for a beat at
+    iteration 0. Beats are monotone (``beat`` keeps the max, so a delayed
+    out-of-order heartbeat cannot roll a host backwards), and queries at an
+    iteration older than a host's last beat never report it dead. Each beat
+    may also carry a wall-clock ``now``; ``dead(..., now=, stale_s=)`` then
+    ORs in wall-clock staleness, which is what lets a survivor *blocked* at
+    a collective (its own iteration frozen) still detect a killed peer.
+    """
 
     def __init__(self, num_hosts: int, patience: int = 2):
-        self.last_seen = np.zeros(num_hosts, np.int64)
+        if num_hosts < 1:
+            raise ValueError(f"num_hosts must be >= 1, got {num_hosts}")
+        if patience < 1:
+            raise ValueError(
+                f"patience must be >= 1, got {patience} (patience=0 would "
+                "declare every host dead the instant it beats)")
+        self.last_seen = np.full(num_hosts, -np.inf)
+        self.last_wall = np.full(num_hosts, -np.inf)
         self.patience = patience
 
-    def beat(self, host: int, iteration: int) -> None:
-        self.last_seen[host] = iteration
+    def beat(self, host: int, iteration: int, *, now: Optional[float] = None) -> None:
+        if not 0 <= host < len(self.last_seen):
+            raise ValueError(f"host {host} out of range [0, {len(self.last_seen)})")
+        self.last_seen[host] = max(self.last_seen[host], iteration)
+        if now is not None:
+            self.last_wall[host] = max(self.last_wall[host], now)
 
-    def dead(self, iteration: int) -> List[int]:
-        return [
-            i for i, seen in enumerate(self.last_seen)
-            if iteration - seen >= self.patience
-        ]
+    def dead(
+        self,
+        iteration: int,
+        *,
+        now: Optional[float] = None,
+        stale_s: Optional[float] = None,
+    ) -> List[int]:
+        out = []
+        for i, seen in enumerate(self.last_seen):
+            lagged = iteration - seen >= self.patience
+            stale = (
+                now is not None
+                and stale_s is not None
+                and now - self.last_wall[i] >= stale_s
+            )
+            if lagged or stale:
+                out.append(i)
+        return out

@@ -26,6 +26,7 @@ import time
 from repro.api import ExperimentSpec
 from repro.configs import (
     AsyncPipelineConfig,
+    DistributedConfig,
     EnvConfig,
     RolloutEngineConfig,
     get_config,
@@ -33,7 +34,7 @@ from repro.configs import (
 )
 from repro.distributed import sharding as shr
 from repro.ft import checkpoint
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import init_distributed, make_fleet_mesh, make_local_mesh
 from repro.rl import RLConfig, list_algorithms
 from repro.rl.trainer import TrainState
 from repro.utils.jax_compat import use_mesh
@@ -86,12 +87,21 @@ def build_experiment(args) -> ExperimentSpec:
             # the episode loop lives in the continuous engine; default the
             # slot pool to one slot per sequence unless --rollout-slots set
             rollout = RolloutEngineConfig(engine="continuous", num_slots=0)
+    distributed = None
+    if args.num_hosts > 1:
+        distributed = DistributedConfig(
+            num_hosts=args.num_hosts,
+            process_id=args.process_id,
+            coordinator=args.coordinator or "",
+            grad_compression=args.grad_compression,
+        )
     return ExperimentSpec(
         model=cfg,
         rl=rl,
         async_pipeline=async_pipeline,
         rollout=rollout,
         env=env,
+        distributed=distributed,
         prompts_per_iter=args.prompts_per_iter,
         centralized=args.centralized_baseline,
         seed=args.seed,
@@ -131,6 +141,20 @@ def main(argv=None) -> None:
     ap.add_argument("--turn-budget", type=int, default=0,
                     help="per-turn response-token cap for --env "
                          "(0 = --max-new-tokens)")
+    ap.add_argument("--num-hosts", type=int, default=1,
+                    help="host processes in the fleet; >1 enables the "
+                         "multi-host runtime (docs/multihost.md) — launch "
+                         "one copy of this driver per host")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this host's rank in [0, --num-hosts)")
+    ap.add_argument("--coordinator", default=None,
+                    help="shared coordinator directory (simulated fleet) or "
+                         "host:port (jax.distributed on real hardware)")
+    ap.add_argument("--grad-compression", choices=["none", "int8_ef"],
+                    default="none",
+                    help="DP gradient exchange encoding: none = exact fp32 "
+                         "(bitwise parity with single-host), int8_ef = "
+                         "block-int8 + error feedback (~1/4 wire bytes)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced model config (CPU-sized)")
     ap.add_argument("--seed", type=int, default=0)
@@ -149,7 +173,19 @@ def main(argv=None) -> None:
         print(f"[train] wrote {args.dump_experiment}")
         return
     cfg = exp.model
-    mesh = make_local_mesh()
+    dist = exp.distributed
+    fleet_ctx = None
+    if dist is not None and dist.enabled:
+        fleet_ctx = init_distributed(
+            dist.coordinator, dist.num_hosts, dist.process_id,
+            grad_compression=dist.grad_compression,
+        )
+        mesh = make_fleet_mesh(dist.num_hosts, dist.devices_per_host)
+        if fleet_ctx is not None:
+            fleet_ctx.start_heartbeats()
+            fleet_ctx.barrier("startup")
+    else:
+        mesh = make_local_mesh()
 
     with use_mesh(mesh):
         pipe = exp.compile(mesh=mesh)
@@ -165,6 +201,8 @@ def main(argv=None) -> None:
             print(f"[train] resumed from {args.resume} at iteration {start}")
 
         for it in range(start, args.iters):
+            if fleet_ctx is not None:
+                fleet_ctx.heartbeat(it)
             t0 = time.perf_counter()
             metrics = pipe.worker.run_iteration()
             dt = time.perf_counter() - t0

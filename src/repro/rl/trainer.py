@@ -120,6 +120,38 @@ def make_actor_step(model: Model, rl: RLConfig, *, algorithm=None) -> Callable:
     return step
 
 
+def make_actor_grad_fn(model: Model, rl: RLConfig, *, algorithm=None) -> Callable:
+    """The loss+grad half of :func:`make_actor_step`: ``(params, batch) ->
+    (grads, metrics)``. Composed with :func:`make_actor_apply_fn` around a
+    gradient exchange (``repro.distributed.fleet``), the split reproduces the
+    fused step bitwise — grads leave the device, cross the DP wire, and come
+    back before clip+AdamW, exactly where a multi-host psum sits."""
+    spec = _resolve_algorithm(rl, algorithm)
+
+    def grad_fn(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: actor_loss_fn(model, rl, p, batch, algorithm=spec),
+            has_aux=True,
+        )(params)
+        return grads, dict(metrics, loss=loss)
+
+    return grad_fn
+
+
+def make_actor_apply_fn(rl: RLConfig) -> Callable:
+    """The clip+update half of :func:`make_actor_step`: ``(state, grads) ->
+    (state, metrics)``."""
+
+    def apply_fn(state: TrainState, grads):
+        grads, gnorm = adamw.clip_by_global_norm(grads, rl.max_grad_norm)
+        params, opt = adamw.update(
+            grads, state.opt, state.params, lr=rl.lr, weight_decay=rl.weight_decay
+        )
+        return TrainState(params, opt), {"grad_norm": gnorm}
+
+    return apply_fn
+
+
 def make_critic_step(cfg: ModelConfig, rl: RLConfig) -> Callable:
     def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
         def loss_fn(p):

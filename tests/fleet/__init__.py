@@ -1,0 +1,8 @@
+"""Simulated-fleet test harness (docs/multihost.md).
+
+``runner.FleetRunner`` spawns one ``train_host.py`` subprocess per host —
+each forcing the full fleet's device count via ``XLA_FLAGS`` so every
+process holds the identical global ``(pod, data, model)`` mesh — wires them
+to a shared coordinator directory, and collects per-host JSON artifacts for
+cross-host invariant assertions (tests/test_fleet.py).
+"""

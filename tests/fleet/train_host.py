@@ -1,0 +1,193 @@
+"""One fleet host: the program FleetRunner spawns per process.
+
+Runs a tiny GRPO pipeline (same reduced config as tests/test_multidevice)
+for FLEET_ITERS iterations on the global fleet mesh, exchanging DP
+gradients through the shared coordinator directory, checkpointing
+(actor_state, rng key) every iteration, and writing a JSON artifact with
+the params digest + metric history for cross-host assertions.
+
+Env contract (all set by tests/fleet/runner.FleetRunner):
+  FLEET_COORD         shared coordinator directory
+  FLEET_NUM_HOSTS     fleet size H
+  FLEET_PROCESS_ID    this host's rank in [0, H)
+  FLEET_ITERS         training iterations
+  FLEET_COMPRESSION   none | int8_ef
+  FLEET_SEED          pipeline seed
+  FLEET_DIE_AT        iteration at which to SIGKILL self (-1 = never)
+  FLEET_DEAD_AFTER_S  wall-clock heartbeat staleness for failure detection
+  FLEET_SOLO          "1" = single-host parity reference: flat (data, model)
+                      mesh over the same devices, fused actor step, no fleet
+  FLEET_ARTIFACT      output JSON path
+  FLEET_BALANCE       "1" = enable the Data Coordinator's length-aware
+                      load balancing (hierarchical on pod meshes)
+  FLEET_WORKDIR       scratch dir (per-host checkpoint dirs live here)
+
+Elastic recovery: when a peer dies mid-run, the blocked exchange raises
+HostsLost; this driver declares the hosts dead (membership epoch bump),
+restores the last checkpoint, rebuilds the pipeline (fresh engines +
+exchange under the new epoch), rewinds the dataloader, and resumes — the
+post-recovery trajectory is bitwise-identical to an undisturbed run because
+batch content is a pure function of the step index and the exact-mode
+exchange reconstructs gradients bit-for-bit.
+"""
+import hashlib
+import json
+import os
+import signal
+import sys
+
+
+def main() -> None:
+    coord = os.environ["FLEET_COORD"]
+    H = int(os.environ.get("FLEET_NUM_HOSTS", "1"))
+    pid = int(os.environ.get("FLEET_PROCESS_ID", "0"))
+    iters = int(os.environ.get("FLEET_ITERS", "3"))
+    comp = os.environ.get("FLEET_COMPRESSION", "none")
+    seed = int(os.environ.get("FLEET_SEED", "0"))
+    die_at = int(os.environ.get("FLEET_DIE_AT", "-1"))
+    dead_after = float(os.environ.get("FLEET_DEAD_AFTER_S", "8"))
+    solo = os.environ.get("FLEET_SOLO") == "1"
+    artifact_path = os.environ["FLEET_ARTIFACT"]
+    workdir = os.environ.get("FLEET_WORKDIR", os.path.dirname(artifact_path))
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import DataCoordinatorConfig
+    from repro.core import build_pipeline
+    from repro.distributed import fleet
+    from repro.ft import checkpoint
+    from repro.launch.mesh import init_distributed, make_fleet_mesh
+    from repro.rl import RLConfig
+    from repro.utils.jax_compat import make_compat_mesh, use_mesh
+
+    cfg = reduced(ARCHS["qwen2.5-7b"], vocab_size=260, num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=4, head_dim=16)
+    # entropy bonus keeps the gradient non-zero even when the synthetic
+    # rewards tie within every GRPO group (zero advantages at random init) —
+    # without it the parity assertion would be vacuous (params never move)
+    rl = RLConfig(algorithm="grpo", group_size=4, max_new_tokens=8, lr=1e-3,
+                  entropy_coef=0.01)
+    # defaults: no load-balance repack, no prefetch — the parity baseline.
+    # FLEET_BALANCE=1 turns on the Data Coordinator's length-aware repack
+    # (hierarchical on pod meshes) for the balanced-token-bins fleet arm.
+    coordinator_cfg = DataCoordinatorConfig(
+        load_balance=os.environ.get("FLEET_BALANCE") == "1")
+
+    # scale the prompt batch with the fleet's device count so the DP sharding
+    # always divides it; fleet and solo processes force the same count, so
+    # both arms of a parity pair agree
+    prompts_per_iter = max(8, len(jax.devices()))
+
+    fleet_ctx = None
+    dist_cfg = None
+    if solo:
+        n = len(jax.devices())
+        mesh = make_compat_mesh((n, 1), ("data", "model"))
+    else:
+        fleet_ctx = init_distributed(
+            coord, H, pid,
+            grad_compression=comp,
+            dead_after_s=dead_after,
+            exchange_timeout_s=240.0,
+        )
+        dist_cfg = fleet_ctx.cfg
+        mesh = make_fleet_mesh(H)
+        fleet_ctx.start_heartbeats()
+        fleet_ctx.barrier("startup", timeout=300.0)
+
+    ckpt_dir = os.path.join(workdir, f"ckpt.host{pid}{'.solo' if solo else ''}")
+
+    def build():
+        return build_pipeline(
+            cfg, rl, mesh=mesh, prompts_per_iter=prompts_per_iter,
+            coordinator=coordinator_cfg, distributed=dist_cfg, seed=seed,
+        )
+
+    with use_mesh(mesh):
+        pipe = build()
+        history = {}
+        recoveries = 0
+        flagged_dead: set = set()
+        it = 0
+        while it < iters:
+            if fleet_ctx is not None:
+                fleet_ctx.heartbeat(it)
+            if it == die_at and not solo:
+                os.kill(os.getpid(), signal.SIGKILL)
+            try:
+                metrics = pipe.worker.run_iteration()
+            except fleet.HostsLost as exc:
+                print(f"[host{pid}] lost {exc.hosts} at it={it}; recovering",
+                      flush=True)
+                flagged_dead.update(exc.hosts)
+                fleet_ctx.declare_dead(exc.hosts)
+                template = {"actor": pipe.ctx.actor_state, "key": pipe.ctx.key}
+                restored, step = checkpoint.restore(ckpt_dir, template)
+                pipe = build()  # fresh engines + exchange under the new epoch
+                # uncommitted device arrays, like a fresh model.init — jit
+                # re-places them against the sharded batch exactly as the
+                # original compilation did
+                pipe.ctx.actor_state = jax.tree.map(
+                    lambda r, t: jnp.asarray(r, dtype=t.dtype),
+                    restored["actor"], pipe.ctx.actor_state)
+                pipe.ctx.key = jnp.asarray(restored["key"])
+                pipe.ctx.dataloader.step = step
+                pipe.ctx.dataloader._built_step = step
+                it = step
+                recoveries += 1
+                continue
+            history[str(it)] = {k: float(v) for k, v in metrics.items()}
+            checkpoint.save(
+                ckpt_dir,
+                {"actor": pipe.ctx.actor_state, "key": pipe.ctx.key},
+                step=it + 1,
+            )
+            it += 1
+
+        params = pipe.ctx.actor_state.params
+        flat = np.concatenate([
+            np.asarray(leaf, np.float32).ravel()
+            for leaf in jax.tree_util.tree_leaves(params)
+        ])
+        stats = pipe.buffer.stats
+        art = {
+            "process_id": pid,
+            "solo": solo,
+            "devices": len(jax.devices()),
+            "compression": comp,
+            "iters": iters,
+            "params_sha256": hashlib.sha256(flat.tobytes()).hexdigest(),
+            "history": history,
+            "steps": sorted(int(k) for k in history),
+            "recoveries": recoveries,
+            "epoch": fleet_ctx.epoch if fleet_ctx else 0,
+            "members": fleet_ctx.members if fleet_ctx else [0],
+            "dead_hosts": fleet_ctx.dead_hosts if fleet_ctx else [],
+            # hosts the monitor flagged DURING training (the HostsLost path),
+            # not a post-exit poll: a peer that already finished cleanly has
+            # stopped heartbeating and would look wall-clock stale here.
+            "monitor_dead": sorted(flagged_dead),
+            "exchange": (
+                dict(pipe.ctx.grad_exchange.stats)
+                if fleet_ctx is not None else None
+            ),
+            "buffer": {
+                "bytes_through_controller": stats.bytes_through_controller,
+                "max_host_inbound_bytes": stats.max_host_inbound_bytes,
+                "redistributions": stats.redistributions,
+            },
+        }
+    tmp = artifact_path + f".tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(art, f, indent=1)
+    os.replace(tmp, artifact_path)
+    if fleet_ctx is not None:
+        fleet_ctx.stop_heartbeats()
+    print(f"[host{pid}] done: {art['params_sha256'][:12]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

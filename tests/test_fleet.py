@@ -1,0 +1,586 @@
+"""Simulated multi-host fleet tests (docs/multihost.md).
+
+Three layers, cheapest last:
+
+1.  **Subprocess fleets** — ``tests/fleet/runner.FleetRunner`` spawns one
+    ``train_host.py`` process per host (each forcing the whole fleet's CPU
+    device count via XLA_FLAGS) against a shared coordinator directory, and
+    the tests assert cross-host invariants on the per-host JSON artifacts:
+
+    * bitwise single-host parity: a 2-host x 4-device fleet (and a 4-host x
+      4-device, 16-device fleet) produces the identical params digest AND
+      per-iteration metric history as a single-host run on the same device
+      count;
+    * the ``int8_ef`` compressed exchange keeps hosts bitwise-identical to
+      each other, converges within tolerance of the exact arm, and ships
+      strictly fewer wire bytes;
+    * the Data Coordinator's hierarchical load balancing emits balanced
+      token bins deterministically across hosts;
+    * elastic recovery: SIGKILL one host mid-run; survivors detect it by
+      heartbeat staleness, agree on the shrunk membership, restore from
+      checkpoint, and finish with a trajectory bitwise-equal to an
+      undisturbed single-host run.
+
+2.  **In-process device probes** — subprocesses with their own forced 16-
+    or 48-device backends exercising fleet mesh geometry, per-host
+    databuffer staging, and ``compressed_psum`` over the ``pod`` axis.
+
+3.  **File-plane unit tests** — FleetContext membership/epochs/waits and
+    GradExchange slice mixing, run inline on the 1-device pytest process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from fleet.runner import FleetRunner
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FLEET_TIMEOUT = 600.0
+
+
+def _clean(history):
+    """The SPMD-invariant view of a metric history: drop wall-times and the
+    fleet wire metrics (absent from solo runs by construction)."""
+    return {
+        it: {k: v for k, v in m.items()
+             if "fleet/" not in k and not k.startswith("time/")}
+        for it, m in history.items()
+    }
+
+
+# ================================================================== #
+# layer 1: subprocess fleets
+# ================================================================== #
+@pytest.fixture(scope="module")
+def fleet8(tmp_path_factory):
+    """2-host x 4-device exact-exchange fleet + the single-host 8-device
+    reference run (same seed, same iteration count)."""
+    r = FleetRunner(tmp_path_factory.mktemp("fleet8"),
+                    num_hosts=2, devices_per_host=4, iters=3)
+    r.launch()
+    r.wait(timeout=FLEET_TIMEOUT)
+    arts = r.artifacts()
+    solo = r.run_solo_reference(timeout=FLEET_TIMEOUT)
+    return arts, solo
+
+
+@pytest.fixture(scope="module")
+def fleet8_comp(tmp_path_factory):
+    """Same fleet, int8 error-feedback gradient compression on the wire."""
+    r = FleetRunner(tmp_path_factory.mktemp("fleet8c"),
+                    num_hosts=2, devices_per_host=4, iters=3,
+                    compression="int8_ef")
+    r.launch()
+    r.wait(timeout=FLEET_TIMEOUT)
+    return r.artifacts()
+
+
+@pytest.fixture(scope="module")
+def fleet8_balance(tmp_path_factory):
+    """Same fleet with the Data Coordinator's length-aware load balancing
+    enabled (hierarchical on the pod mesh)."""
+    r = FleetRunner(tmp_path_factory.mktemp("fleet8b"),
+                    num_hosts=2, devices_per_host=4, iters=3,
+                    extra_env={"FLEET_BALANCE": "1"})
+    r.launch()
+    r.wait(timeout=FLEET_TIMEOUT)
+    return r.artifacts()
+
+
+@pytest.fixture(scope="module")
+def fleet16(tmp_path_factory):
+    """4-host x 4-device (16-device) fleet + its 16-device solo reference."""
+    r = FleetRunner(tmp_path_factory.mktemp("fleet16"),
+                    num_hosts=4, devices_per_host=4, iters=3)
+    r.launch()
+    r.wait(timeout=FLEET_TIMEOUT)
+    arts = r.artifacts()
+    solo = r.run_solo_reference(timeout=FLEET_TIMEOUT)
+    return arts, solo
+
+
+@pytest.fixture(scope="module")
+def recovery16(tmp_path_factory):
+    """16-device fleet where host 1 SIGKILLs itself at iteration 1; the
+    three survivors must detect, rebalance, restore, and finish."""
+    r = FleetRunner(tmp_path_factory.mktemp("recovery16"),
+                    num_hosts=4, devices_per_host=4, iters=3,
+                    dead_after_s=6.0)
+    r.launch(die_at={1: 1})
+    r.wait(hosts=[0, 2, 3], timeout=FLEET_TIMEOUT)
+    r.wait(hosts=[1], expect_failure=(1,))
+    return r.artifacts([0, 2, 3])
+
+
+# ---------------- bitwise single-host parity ---------------- #
+def test_fleet_parity_bitwise(fleet8):
+    """The tentpole invariant: a 2-host fleet over the global (pod, data,
+    model) mesh is bitwise-identical — params AND every per-iteration
+    metric — to one process on a flat 8-device mesh."""
+    arts, solo = fleet8
+    assert solo["devices"] == 8
+    for h, art in arts.items():
+        assert art["params_sha256"] == solo["params_sha256"], f"host {h}"
+        assert _clean(art["history"]) == _clean(solo["history"]), f"host {h}"
+
+
+def test_fleet_parity_16_devices_4_hosts(fleet16):
+    """Same invariant at fleet scale: 4 processes x 16 simulated devices."""
+    arts, solo = fleet16
+    assert len(arts) == 4 and solo["devices"] == 16
+    shas = {h: a["params_sha256"] for h, a in arts.items()}
+    assert set(shas.values()) == {solo["params_sha256"]}, shas
+    for h, art in arts.items():
+        assert _clean(art["history"]) == _clean(solo["history"]), f"host {h}"
+
+
+def test_fleet_no_controller_traffic(fleet8):
+    """Distributed dataflow: no stage output is ever gathered through a
+    controller host (the scaling bottleneck the paper removes)."""
+    arts, solo = fleet8
+    for art in list(arts.values()) + [solo]:
+        assert art["buffer"]["bytes_through_controller"] == 0
+
+
+def test_fleet_clean_run_membership(fleet8):
+    arts, _ = fleet8
+    for art in arts.values():
+        assert art["members"] == [0, 1]
+        assert art["epoch"] == 0
+        assert art["recoveries"] == 0
+        assert art["dead_hosts"] == []
+        assert art["monitor_dead"] == []
+
+
+def test_fleet_exact_wire_accounting(fleet8):
+    """grad_compression='none' ships raw fp32: wire bytes == exact bytes,
+    nothing saved, one exchange per iteration."""
+    arts, _ = fleet8
+    for art in arts.values():
+        ex = art["exchange"]
+        assert ex["exchanges"] == art["iters"] == 3
+        assert ex["wire_bytes"] == ex["exact_bytes"] > 0
+        assert ex["wire_saved_bytes"] == 0
+
+
+# ---------------- compressed exchange ---------------- #
+def test_compressed_hosts_stay_identical(fleet8_comp):
+    """Every host decodes the same published bytes, so compression never
+    lets hosts drift from EACH OTHER — only (boundedly) from the exact arm."""
+    arts = fleet8_comp
+    assert arts[0]["params_sha256"] == arts[1]["params_sha256"]
+    assert _clean(arts[0]["history"]) == _clean(arts[1]["history"])
+
+
+def test_compressed_converges_within_tolerance(fleet8, fleet8_comp):
+    arts, _ = fleet8
+    comp = fleet8_comp
+    # genuinely different trajectory...
+    assert comp[0]["params_sha256"] != arts[0]["params_sha256"]
+    # ...that stays within quantization-noise distance of the exact arm
+    last = str(max(int(k) for k in arts[0]["history"]))
+    exact_loss = arts[0]["history"][last]["actor/loss"]
+    comp_loss = comp[0]["history"][last]["actor/loss"]
+    assert abs(exact_loss - comp_loss) < 5e-3, (exact_loss, comp_loss)
+
+
+def test_compressed_strictly_fewer_wire_bytes(fleet8, fleet8_comp):
+    arts, _ = fleet8
+    exact_ex = arts[0]["exchange"]
+    comp_ex = fleet8_comp[0]["exchange"]
+    assert comp_ex["exact_bytes"] == exact_ex["exact_bytes"]
+    assert 0 < comp_ex["wire_bytes"] < comp_ex["exact_bytes"]
+    # int8 blocks + one fp32 scale per 256 lanes vs fp32: ~0.25x
+    ratio = comp_ex["wire_bytes"] / comp_ex["exact_bytes"]
+    assert ratio < 0.3, ratio
+    assert comp_ex["wire_saved_bytes"] == (
+        comp_ex["exact_bytes"] - comp_ex["wire_bytes"])
+    # per-iteration metric agrees with the cumulative counter
+    hist_wire = sum(m["actor/fleet/wire_bytes"]
+                    for m in fleet8_comp[0]["history"].values())
+    assert hist_wire == comp_ex["wire_bytes"]
+
+
+# ---------------- balanced token bins ---------------- #
+def test_fleet_hierarchical_balance(fleet8_balance):
+    """With load balancing on, every iteration reports token-bin balance,
+    the repack never worsens the max/mean bucket ratio, the hierarchical
+    (pod-aware) path is active, and both hosts compute the identical
+    permutation (their metric histories match bitwise)."""
+    arts = fleet8_balance
+    assert _clean(arts[0]["history"]) == _clean(arts[1]["history"])
+    assert arts[0]["params_sha256"] == arts[1]["params_sha256"]
+    for m in arts[0]["history"].values():
+        assert "balance/skipped" not in m, m
+        assert m["balance/token_ratio_after"] <= (
+            m["balance/token_ratio_before"] + 1e-9)
+        # presence of the cross-host metric == the hierarchical path ran
+        assert m["balance/cross_host_row_moves"] >= 0
+        assert m["balance/repacked"] in (0.0, 1.0)
+
+
+# ---------------- elastic recovery ---------------- #
+def test_recovery_survivors_agree(recovery16):
+    """All survivors adopt the same epoch-1 membership excluding the killed
+    host, recover exactly once, and land on identical params."""
+    arts = recovery16
+    assert sorted(arts) == [0, 2, 3]
+    shas = {h: a["params_sha256"] for h, a in arts.items()}
+    assert len(set(shas.values())) == 1, shas
+    for art in arts.values():
+        assert art["steps"] == [0, 1, 2]  # step-count continuity, no gaps
+        assert art["recoveries"] == 1
+        assert art["epoch"] == 1
+        assert art["members"] == [0, 2, 3]
+        assert art["dead_hosts"] == [1]
+
+
+def test_recovery_monitor_flags_killed_host(recovery16):
+    for art in recovery16.values():
+        assert 1 in art["monitor_dead"]
+
+
+def test_recovery_bitwise_continuity(recovery16, fleet16):
+    """Post-recovery trajectory == undisturbed single-host run, bit for bit:
+    checkpoint restore + deterministic dataloader rewind + exact exchange
+    leave no trace of the failure in params or losses."""
+    _, solo = fleet16
+    for h, art in recovery16.items():
+        assert art["params_sha256"] == solo["params_sha256"], f"host {h}"
+        assert _clean(art["history"]) == _clean(solo["history"]), f"host {h}"
+
+
+# ================================================================== #
+# layer 2: in-process device probes (own forced device counts)
+# ================================================================== #
+def run_py(body: str, devices: int = 16) -> str:
+    code = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={devices}'\n"
+        "import sys\n"
+        f"sys.path.insert(0, {os.path.join(REPO, 'src')!r})\n"
+        "from repro.utils.jax_compat import make_compat_mesh, use_mesh, shard_map\n"
+        + textwrap.dedent(body)
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=420,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_fleet_mesh_geometry_48_devices():
+    """make_fleet_mesh + host_device_groups on a 48-device simulated fleet:
+    one contiguous device block per host, data x model tiling within."""
+    out = run_py("""
+        import jax
+        from repro.launch.mesh import make_fleet_mesh
+        from repro.distributed.fleet import host_device_groups
+        assert len(jax.devices()) == 48
+        mesh = make_fleet_mesh(4)
+        assert dict(mesh.shape) == {'pod': 4, 'data': 12, 'model': 1}
+        mesh2 = make_fleet_mesh(4, model_parallel=2)
+        assert dict(mesh2.shape) == {'pod': 4, 'data': 6, 'model': 2}
+        groups = host_device_groups(mesh2)
+        assert groups == [list(range(h * 12, (h + 1) * 12)) for h in range(4)]
+        mesh3 = make_fleet_mesh(3, devices_per_host=16)
+        assert dict(mesh3.shape) == {'pod': 3, 'data': 16, 'model': 1}
+        # a flat single-process mesh is one host
+        flat = make_compat_mesh((48, 1), ('data', 'model'))
+        assert host_device_groups(flat) == [list(range(48))]
+        try:
+            make_fleet_mesh(5)
+            raise SystemExit('expected ValueError')
+        except ValueError as e:
+            assert 'divisible' in str(e)
+        try:
+            make_fleet_mesh(7, devices_per_host=7)  # needs 49 > 48
+            raise SystemExit('expected ValueError')
+        except ValueError as e:
+            assert 'xla_force_host_platform_device_count=49' in str(e)
+        print('OK')
+    """, devices=48)
+    assert "OK" in out
+
+
+def test_databuffer_per_host_staging():
+    """Cross-host-aware databuffer: every reshard charges each host only its
+    own destination shard (balanced, never the full array); the centralized
+    baseline gathers the full batch onto host 0 on every put."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core import DistributedDatabuffer
+        from repro.core.databuffer import CentralizedDatabuffer
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh(4)  # (4, 4, 1) over 16 devices
+        buf = DistributedDatabuffer(mesh)
+        x = jnp.arange(64 * 64, dtype=jnp.float32).reshape(64, 64)
+        total = x.size * 4
+        buf.put('x', x, P('pod'))
+        # staging the producer's own shards is free
+        assert buf.stats.max_host_inbound_bytes == 0
+        buf.get('x', P(('pod', 'data')))  # 4-way -> 16-way split
+        assert dict(buf.stats.host_inbound_bytes) == {
+            h: total // 4 for h in range(4)}
+        buf.get('x', P(None, 'pod'))  # transpose: rows-by-pod -> cols-by-pod
+        assert dict(buf.stats.host_inbound_bytes) == {
+            h: 2 * (total // 4) for h in range(4)}
+        # balanced per-host inbound, and no host ever staged the full array
+        assert buf.stats.max_host_inbound_bytes < total
+        assert buf.stats.bytes_through_controller == 0
+
+        cbuf = CentralizedDatabuffer(mesh)
+        cbuf.put('x', x, P('pod'))
+        assert dict(cbuf.stats.host_inbound_bytes) == {0: total}
+        assert cbuf.stats.bytes_through_controller == total
+        print('OK')
+    """, devices=16)
+    assert "OK" in out
+
+
+def test_compressed_psum_over_pod_axis():
+    """compressed_psum inside shard_map over the fleet's pod axis on a
+    48-device mesh: every pod row ends with the (approximate) global sum,
+    within int8-per-block quantization distance of the exact psum."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed import compression
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh(4)  # (4, 12, 1)
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
+
+        def body(v):
+            return (jax.lax.psum(v, 'pod'),
+                    compression.compressed_psum(v, 'pod'))
+
+        with use_mesh(mesh):
+            exact, approx = jax.jit(shard_map(
+                body, mesh=mesh, in_specs=(P('pod', None, None),),
+                out_specs=(P('pod', None, None), P('pod', None, None)),
+                check_vma=False))(x)
+        exact, approx = np.asarray(exact), np.asarray(approx)
+        # psum replicates the true sum into every pod row
+        np.testing.assert_allclose(
+            exact, np.tile(np.asarray(x).sum(0), (4, 1, 1)), rtol=1e-5)
+        rel = np.abs(exact - approx).max() / np.abs(exact).max()
+        assert rel < 0.05, rel
+        ex_b, comp_b = compression.wire_bytes(np.asarray(x[0], np.float32))
+        assert comp_b < ex_b / 3
+        print('OK')
+    """, devices=48)
+    assert "OK" in out
+
+
+# ================================================================== #
+# layer 3: file-plane units (1 device, no subprocess)
+# ================================================================== #
+def _mk_ctx(root, pid, hosts=2, **overrides):
+    from repro.configs.base import DistributedConfig
+    from repro.distributed.fleet import FleetContext
+
+    cfg = DistributedConfig(num_hosts=hosts, process_id=pid,
+                            coordinator=str(root), **overrides)
+    return FleetContext(cfg)
+
+
+def test_fleet_context_iteration_lag_detection(tmp_path):
+    c0, c1 = _mk_ctx(tmp_path, 0), _mk_ctx(tmp_path, 1)
+    c0.heartbeat(0)
+    c1.heartbeat(0)
+    assert c0.poll_peers() == []
+    c0.heartbeat(5)  # peer now >= patience iterations behind
+    assert c0.poll_peers() == [1]  # never includes self
+
+
+def test_fleet_context_wallclock_staleness(tmp_path):
+    c0 = _mk_ctx(tmp_path, 0, dead_after_s=0.5)
+    c1 = _mk_ctx(tmp_path, 1, dead_after_s=0.5)
+    c0.heartbeat(0)
+    c1.heartbeat(0)
+    assert c0.poll_peers() == []
+    time.sleep(0.7)
+    c0.heartbeat(0)  # refresh self; same iteration, so no lag signal
+    assert c0.poll_peers() == [1]
+
+
+def test_membership_epoch_first_writer_wins(tmp_path):
+    c0 = _mk_ctx(tmp_path, 0, hosts=3)
+    c1 = _mk_ctx(tmp_path, 1, hosts=3)
+    c0.declare_dead([2])
+    assert (c0.epoch, c0.members, c0.dead_hosts) == (1, [0, 1], [2])
+    c1.declare_dead([2])  # racing survivor adopts, does not re-publish
+    assert (c1.epoch, c1.members) == (1, [0, 1])
+    # dead host's slice ownership reassigns deterministically and totally
+    assert sorted(s for ss in c0.partition().values() for s in ss) == [0, 1, 2]
+    assert c0.partition()[2] == []
+    assert c0.slice_owner() == c1.slice_owner()
+
+
+def test_declare_self_dead_raises(tmp_path):
+    c0 = _mk_ctx(tmp_path, 0)
+    with pytest.raises(RuntimeError):
+        c0.declare_dead([0])
+
+
+def test_wait_files_raises_hosts_lost_on_stale_peer(tmp_path):
+    from repro.distributed.fleet import HostsLost
+
+    c0 = _mk_ctx(tmp_path, 0, dead_after_s=0.4)
+    c1 = _mk_ctx(tmp_path, 1, dead_after_s=0.4)
+    c0.heartbeat(0)
+    c1.heartbeat(0)
+    time.sleep(0.6)
+    with pytest.raises(HostsLost) as exc:
+        c0.wait_files([str(tmp_path / "never")], timeout=10.0)
+    assert exc.value.hosts == [1]
+
+
+def test_wait_files_adopts_published_epoch(tmp_path):
+    from repro.distributed.fleet import HostsLost
+
+    c0 = _mk_ctx(tmp_path, 0, hosts=3)
+    c1 = _mk_ctx(tmp_path, 1, hosts=3)
+    c0.heartbeat(0)
+    c1.heartbeat(0)
+    c1.declare_dead([2])  # another survivor publishes the transition
+    with pytest.raises(HostsLost) as exc:
+        c0.wait_files([str(tmp_path / "never")], timeout=10.0)
+    assert exc.value.hosts == [2]
+    assert (c0.epoch, c0.members) == (1, [0, 1])
+
+
+def test_wait_files_timeout_without_detection(tmp_path):
+    c0 = _mk_ctx(tmp_path, 0)
+    with pytest.raises(TimeoutError):
+        c0.wait_files([str(tmp_path / "never")], timeout=0.2, detect=False)
+
+
+def test_barrier_rendezvous(tmp_path):
+    c0, c1 = _mk_ctx(tmp_path, 0), _mk_ctx(tmp_path, 1)
+    errs = []
+
+    def arrive(c):
+        try:
+            c.barrier("startup", timeout=30.0)
+        except Exception as e:  # pragma: no cover - failure reporting
+            errs.append(e)
+
+    ts = [threading.Thread(target=arrive, args=(c,)) for c in (c0, c1)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+    assert not errs and not any(t.is_alive() for t in ts)
+
+
+def test_ensure_context_reuse_and_replacement(tmp_path):
+    from repro.configs.base import DistributedConfig
+    from repro.distributed import fleet
+
+    prev = fleet.get_context()
+    try:
+        cfg = DistributedConfig(num_hosts=2, process_id=0,
+                                coordinator=str(tmp_path / "a"))
+        a = fleet.ensure_context(cfg)
+        assert fleet.ensure_context(cfg) is a  # epoch state survives rebuilds
+        other = DistributedConfig(num_hosts=2, process_id=0,
+                                  coordinator=str(tmp_path / "b"))
+        assert fleet.ensure_context(other) is not a
+    finally:
+        fleet.set_context(prev)
+
+
+def _run_exchange_pair(tmp_path, mode, grads_by_host, rounds=1):
+    """Drive both hosts' GradExchange concurrently (publish-then-wait makes
+    this deadlock-free single-process); returns per-host results per round."""
+    from repro.distributed.fleet import GradExchange
+
+    ctxs = [_mk_ctx(tmp_path, h) for h in range(2)]
+    for c in ctxs:
+        c.heartbeat(0)  # bring-up contract: never-beat peers look dead
+    exs = [GradExchange(c, mode) for c in ctxs]
+    results = {0: [], 1: []}
+    errors = []
+
+    def drive(h):
+        try:
+            for _ in range(rounds):
+                out, metrics = exs[h](grads_by_host[h])
+                results[h].append((out, metrics))
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append((h, e))
+
+    ts = [threading.Thread(target=drive, args=(h,)) for h in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=120)
+    assert not errors, errors
+    assert not any(t.is_alive() for t in ts)
+    return exs, results
+
+
+def test_grad_exchange_exact_slice_mixing(tmp_path):
+    """Host h owns slice h of the flat vector: the reconstruction every host
+    returns is slice 0 from host 0's gradient + slice 1 from host 1's —
+    bitwise, with the pytree structure and leaf dtypes preserved."""
+    import jax.numpy as jnp
+
+    g0 = {"w": jnp.full((30,), 1.0, jnp.float32),
+          "b": jnp.full((10,), 3.0, jnp.float32)}
+    g1 = {"w": jnp.full((30,), 2.0, jnp.float32),
+          "b": jnp.full((10,), 4.0, jnp.float32)}
+    exs, results = _run_exchange_pair(tmp_path, "none", {0: g0, 1: g1})
+    out0 = results[0][0][0]
+    out1 = results[1][0][0]
+    # dict leaves flatten alphabetically (b then w): 40-element vector with
+    # slice [0:20) from host 0 (b + first 10 of w), [20:40) from host 1
+    expect_b = np.full(10, 3.0)
+    expect_w = np.concatenate([np.full(10, 1.0), np.full(20, 2.0)])
+    for out in (out0, out1):
+        np.testing.assert_array_equal(np.asarray(out["w"]), expect_w)
+        np.testing.assert_array_equal(np.asarray(out["b"]), expect_b)
+    for ex in exs:
+        assert ex.stats["wire_bytes"] == ex.stats["exact_bytes"] == 40 * 4
+
+
+def test_grad_exchange_int8_ef_bounded_and_cheaper(tmp_path):
+    import jax
+
+    key = jax.random.PRNGKey(7)
+    g = jax.random.normal(key, (600,), dtype=np.float32)
+    exs, results = _run_exchange_pair(tmp_path, "int8_ef", {0: g, 1: g},
+                                      rounds=2)
+    vec = np.asarray(g)
+    # per-block int8: elementwise error bounded by the block scale (the EF
+    # round's scale can grow by half an lsb, hence 126 not 127)
+    bound = np.abs(vec).max() / 126.0
+    for h in range(2):
+        for out, _ in results[h]:
+            assert np.abs(np.asarray(out) - vec).max() <= bound
+    # both hosts decode the same bytes -> identical reconstructions
+    np.testing.assert_array_equal(np.asarray(results[0][0][0]),
+                                  np.asarray(results[1][0][0]))
+    np.testing.assert_array_equal(np.asarray(results[0][1][0]),
+                                  np.asarray(results[1][1][0]))
+    for ex in exs:
+        assert 0 < ex.stats["wire_bytes"] < ex.stats["exact_bytes"]
+        assert ex.stats["wire_saved_bytes"] > 0
+
+
+def test_grad_exchange_rejects_unknown_mode(tmp_path):
+    from repro.distributed.fleet import GradExchange
+
+    with pytest.raises(ValueError):
+        GradExchange(_mk_ctx(tmp_path, 0), "fp4_magic")

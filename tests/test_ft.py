@@ -2,7 +2,13 @@
 import numpy as np
 import pytest
 
-from repro.ft.straggler import HeartbeatMonitor, rebalance
+from repro.ft.straggler import (
+    HeartbeatMonitor,
+    balance_by_length,
+    bucket_token_ratio,
+    cross_host_rows,
+    rebalance,
+)
 
 
 def test_rebalance_no_stragglers_identity():
@@ -45,3 +51,126 @@ def test_heartbeat_monitor():
             hb.beat(2, it)
     assert hb.dead(3) == [2]
     assert hb.dead(1) == []
+
+
+# ---------------- HeartbeatMonitor edge cases ---------------- #
+def test_heartbeat_never_beat_host_is_dead_at_any_query():
+    """Regression: last_seen starts at -inf, not 0 — a host that never
+    launched must not look like it beat at iteration 0."""
+    hb = HeartbeatMonitor(2, patience=2)
+    hb.beat(0, 0)
+    assert hb.dead(0) == [1]
+    assert hb.dead(-5) == [1]  # even queries "before the start"
+
+
+def test_heartbeat_invalid_construction():
+    with pytest.raises(ValueError):
+        HeartbeatMonitor(0)
+    with pytest.raises(ValueError):
+        HeartbeatMonitor(2, patience=0)  # would kill a host the beat it beats
+    with pytest.raises(ValueError):
+        HeartbeatMonitor(2, patience=-1)
+
+
+def test_heartbeat_host_bounds():
+    hb = HeartbeatMonitor(2)
+    with pytest.raises(ValueError):
+        hb.beat(2, 0)
+    with pytest.raises(ValueError):
+        hb.beat(-1, 0)
+
+
+def test_heartbeat_non_monotone_queries_and_beats():
+    """A delayed out-of-order beat must not roll a host backwards, and a
+    query at an iteration older than the last beat never reports dead."""
+    hb = HeartbeatMonitor(1, patience=1)
+    hb.beat(0, 5)
+    hb.beat(0, 2)  # late arrival; max() keeps 5
+    assert hb.dead(5) == []
+    assert hb.dead(2) == []  # non-monotone query: 2 - 5 < patience
+    assert hb.dead(6) == [0]
+
+
+def test_heartbeat_wallclock_staleness():
+    """Wall-clock staleness ORs with iteration lag: a survivor blocked at a
+    collective (its own iteration frozen) still detects a killed peer."""
+    hb = HeartbeatMonitor(2, patience=10)
+    hb.beat(0, 0, now=100.0)
+    hb.beat(1, 0, now=100.0)
+    assert hb.dead(0, now=105.0, stale_s=30.0) == []
+    hb.beat(0, 0, now=131.0)  # only host 0 keeps beating
+    assert hb.dead(0, now=131.0, stale_s=30.0) == [1]
+    # without the stale_s opt-in the lag rule alone says everyone is fine
+    assert hb.dead(0) == []
+    hb.beat(1, 0, now=90.0)  # stale wall-clock beat cannot roll back
+    assert hb.dead(0, now=131.0, stale_s=30.0) == [1]
+
+
+# ---------------- hierarchical length balancing ---------------- #
+def _host_totals(lengths, perm, hosts):
+    w = np.asarray(lengths, dtype=np.float64)[perm]
+    return np.array([c.sum() for c in np.array_split(w, hosts)])
+
+
+def test_hierarchical_balance_validation():
+    with pytest.raises(ValueError):  # capacities only make sense flat
+        balance_by_length([1.0] * 8, 4, hosts=2, capacities=[2, 2, 2, 2])
+    with pytest.raises(ValueError):  # buckets must divide across hosts
+        balance_by_length([1.0] * 8, 3, hosts=2)
+    with pytest.raises(ValueError):  # groups must divide across hosts
+        balance_by_length([1.0] * 6, 2, group_size=2, hosts=2)
+
+
+def test_hierarchical_balance_is_permutation_and_deterministic():
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(1, 100, size=32).astype(float)
+    p1 = balance_by_length(lengths, 8, group_size=2, hosts=4)
+    p2 = balance_by_length(lengths, 8, group_size=2, hosts=4)
+    assert sorted(p1.tolist()) == list(range(32))
+    np.testing.assert_array_equal(p1, p2)
+    # grouped rows stay adjacent pairs
+    pairs = p1.reshape(-1, 2)
+    assert (pairs[:, 1] - pairs[:, 0] == 1).all()
+    assert (pairs[:, 0] % 2 == 0).all()
+
+
+def test_hierarchical_balance_balanced_input_never_crosses_hosts():
+    """Already-balanced hosts: every row must stay on its resident host —
+    the repack permutation never pays the inter-pod links for nothing."""
+    lengths = np.tile([10.0, 2.0, 7.0, 5.0], 4)  # same mix on every host
+    perm = balance_by_length(lengths, 8, hosts=4)
+    assert cross_host_rows(perm, 4) == 0
+    # and it still balances the local buckets
+    assert bucket_token_ratio(lengths, 8, perm) <= bucket_token_ratio(
+        lengths, 8)
+
+
+def test_hierarchical_balance_swaps_reduce_host_imbalance():
+    """One host generated all the long rollouts: swap migration must pull
+    the max/mean host-token ratio under (or toward) tolerance with
+    equal-row-count swaps."""
+    lengths = np.array([100.0, 90, 80, 70] + [1.0] * 12)
+    before = _host_totals(lengths, np.arange(16), 4)
+    perm = balance_by_length(lengths, 4, hosts=4, inter_host_tolerance=1.25)
+    after = _host_totals(lengths, perm, 4)
+    assert sorted(perm.tolist()) == list(range(16))
+    assert after.max() / after.mean() < before.max() / before.mean()
+    assert cross_host_rows(perm, 4) > 0
+    # swaps preserve equal rows per host
+    assert all(len(c) == 4 for c in np.array_split(perm, 4))
+
+
+def test_cross_host_rows_counts_block_crossings():
+    assert cross_host_rows(np.arange(8), 2) == 0
+    swapped = np.array([0, 1, 4, 5, 2, 3, 6, 7])  # two rows traded per host
+    assert cross_host_rows(swapped, 2) == 4
+    assert cross_host_rows(np.array([4, 5, 6, 7, 0, 1, 2, 3]), 2) == 8
+
+
+def test_flat_balance_unchanged_by_hosts_1():
+    """hosts=1 must be byte-identical to the pre-hierarchical behaviour."""
+    rng = np.random.default_rng(3)
+    lengths = rng.integers(1, 50, size=24).astype(float)
+    np.testing.assert_array_equal(
+        balance_by_length(lengths, 4, group_size=2),
+        balance_by_length(lengths, 4, group_size=2, hosts=1))

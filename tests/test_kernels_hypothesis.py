@@ -256,3 +256,94 @@ def test_radix_prefix_cache_properties(ops):
             assert n.refcount >= 0, "negative refcount"
         cache.check_invariants()
         assert cache.num_pages == len(live), "mirror drifted from trie"
+
+
+# --------------------------------------------------------------------------- #
+# distributed: gradient-compression wire-format properties (the int8_ef
+# exchange of repro.distributed.fleet.GradExchange)
+# --------------------------------------------------------------------------- #
+@given(st.integers(1, 700), st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_compression_ef_telescoping(n, rounds, seed):
+    """Error feedback telescopes: across T rounds, sum(decoded) ==
+    sum(gradients) - final_residual (each round's quantization error is
+    carried, never lost), and the residual stays bounded by one round's
+    block scale — the property that makes the low-bit exchange trainable."""
+    from repro.distributed import compression
+
+    rng = np.random.default_rng(seed)
+    err = None
+    dec_sum = np.zeros(n, np.float64)
+    g_sum = np.zeros(n, np.float64)
+    last_target_max = 0.0
+    for _ in range(rounds):
+        g = (rng.standard_normal(n) * rng.uniform(0.1, 10.0)).astype(
+            np.float32)
+        last_target_max = float(
+            np.abs(g.astype(np.float64) + (0 if err is None
+                                           else np.asarray(err))).max())
+        q, scale, err = compression.encode(jnp.asarray(g), err)
+        dec_sum += np.asarray(compression.decode(q, scale, (n,), n),
+                              np.float64)
+        g_sum += g
+    scale_mag = max(np.abs(g_sum).max(), 1.0)
+    np.testing.assert_allclose(dec_sum + np.asarray(err), g_sum,
+                               atol=1e-4 * scale_mag)
+    # residual never exceeds half an lsb of the last round's quantization
+    assert np.abs(np.asarray(err)).max() <= last_target_max / 254.0 + 1e-6
+
+
+@given(st.integers(1, 700), st.integers(0, 2**31 - 1))
+def test_ef_update_conserves_signal(n, seed):
+    """One ef_update round: decoded + new_error == grad + carried_error (to
+    fp32 rounding) — compression loses nothing, it only defers."""
+    from repro.distributed.compression import ef_update
+
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    e = jnp.asarray((rng.standard_normal(n) * 0.01).astype(np.float32))
+    decoded, new_err = ef_update(g, e)
+    np.testing.assert_allclose(
+        np.asarray(decoded) + np.asarray(new_err),
+        np.asarray(g) + np.asarray(e), rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(1, 2000), st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_bounded_by_block_scale(n, seed):
+    """Per element: |x - dequant(quant(x))| <= its block's scale / 2 (round-
+    to-nearest int8 with per-block max/127 scales), including blocks of
+    zeros (scale 0 -> exact) and heavy-tailed magnitudes across blocks."""
+    from repro.distributed.compression import BLOCK, _dequantize, _quantize
+
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n)
+         * 10.0 ** rng.integers(-3, 4, size=n)).astype(np.float32)
+    if n > BLOCK:  # force an all-zero block now and then
+        x[:BLOCK] *= rng.integers(0, 2)
+    q, scale = _quantize(jnp.asarray(x))
+    y = np.asarray(_dequantize(q, scale, (n,), n))
+    err = np.abs(x - y)
+    s = np.asarray(scale).ravel()
+    for b in range(len(s)):
+        blk = err[b * BLOCK:(b + 1) * BLOCK]
+        if blk.size:
+            assert blk.max() <= s[b] / 2 + 1e-7 * max(s[b], 1.0), (b, s[b])
+
+
+@given(st.integers(1, 3000),
+       st.sampled_from(["float32", "bfloat16", "float16"]),
+       st.integers(0, 2**31 - 1))
+def test_wire_bytes_exact_for_mixed_dtypes(n, dtype, seed):
+    """wire_bytes is byte-exact accounting, not an estimate: `exact` is the
+    raw payload at the array's own dtype width, `comp` equals the actual
+    nbytes of the int8 blocks + fp32 scales _quantize materializes."""
+    from repro.distributed.compression import _quantize, wire_bytes
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32), dtype=dtype)
+    exact, comp = wire_bytes(x)
+    assert exact == n * x.dtype.itemsize
+    q, scale = _quantize(x)
+    assert q.dtype == jnp.int8 and scale.dtype == jnp.float32
+    assert comp == (q.size * q.dtype.itemsize
+                    + scale.size * scale.dtype.itemsize)
+    assert comp < exact or n * x.dtype.itemsize <= comp  # tiny arrays may pad
