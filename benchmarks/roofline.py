@@ -84,6 +84,73 @@ def analyze(rows: List[Dict], mem_rows: Optional[List[Dict]] = None) -> List[Dic
     return out
 
 
+def decode_attention_bytes(
+    kv_lens: List[int],
+    *,
+    S: int,
+    kvh: int,
+    d: int,
+    block_s: int,
+    page_size: int,
+    dtype_bytes: int = 2,
+) -> Dict[str, float]:
+    """Analytic HBM traffic per decode step for the three cache-read
+    strategies, for a batch of per-slot fills ``kv_lens`` in an arena of
+    width ``S`` (K and V both read once; q/o traffic is negligible against
+    the cache and identical across variants, so it is omitted).
+
+      dense:  the pre-ragged kernel swept every S-block of every slot —
+              the full (B, S) cache regardless of fill.
+      ragged: grid truncation via the clamped index map fetches only
+              ceil(kv_len / block_s) blocks per slot (dead steps repeat a
+              block index, so Pallas elides the copy).
+      paged:  the block-table kernel fetches ceil(kv_len / page_size)
+              pool pages per slot — the same truncation at page
+              granularity, with no staging copy of the S-wide arena
+              beforehand (``staging_bytes`` is that eliminated copy: the
+              old serving burst wrote gather(pool)->slot rows and then
+              read them back; dense already counts the read-back).
+    """
+    per_pos = 2 * kvh * d * dtype_bytes  # K + V, one position
+    dense = len(kv_lens) * S * per_pos
+    ragged = sum(-(-l // block_s) * block_s for l in kv_lens) * per_pos
+    paged = sum(-(-l // page_size) * page_size for l in kv_lens) * per_pos
+    return {
+        "dense_bytes": float(dense),
+        "ragged_bytes": float(ragged),
+        "paged_bytes": float(paged),
+        "staging_bytes": float(dense),  # gather(pool) write eliminated
+        "ragged_vs_dense": ragged / dense if dense else 0.0,
+        "paged_vs_dense": paged / dense if dense else 0.0,
+        "dense_s_at_peak": dense / HBM_BPS,
+        "ragged_s_at_peak": ragged / HBM_BPS,
+        "paged_s_at_peak": paged / HBM_BPS,
+    }
+
+
+def _print_decode_kernels() -> None:
+    """Achieved-vs-peak bytes for the ragged/paged decode kernels on the
+    skewed 70/20/10 serving mix of benchmarks/rollout.py: 70% of slots
+    short (S/8 filled), 20% medium (S/2), 10% full."""
+    B, S, kvh, d, block_s, ps = 64, 2048, 8, 128, 512, 64
+    mix = ([S // 8] * (7 * B // 10) + [S // 2] * (2 * B // 10))
+    mix += [S] * (B - len(mix))
+    r = decode_attention_bytes(mix, S=S, kvh=kvh, d=d,
+                               block_s=block_s, page_size=ps)
+    for name in ("dense", "ragged", "paged"):
+        frac = r[f"{name}_bytes"] / r["dense_bytes"]
+        print(
+            f"roofline_decode/{name},{r[f'{name}_s_at_peak'] * 1e6:.1f},"
+            f"bytes={r[f'{name}_bytes'] / 1e6:.1f}MB frac_of_dense={frac:.3f}"
+            f" (B={B} S={S} kvh={kvh} d={d} 70/20/10 mix)"
+        )
+    print(
+        f"roofline_decode/paged_staging_eliminated,"
+        f"{r['staging_bytes'] / HBM_BPS * 1e6:.1f},"
+        f"bytes={r['staging_bytes'] / 1e6:.1f}MB per-burst gather copy removed"
+    )
+
+
 def _print_table(tag: str, suffix: str) -> None:
     path = os.path.join(RESULTS, f"dryrun_roofline{suffix}.json")
     cpath = os.path.join(RESULTS, f"dryrun_compile{suffix}.json")
@@ -109,6 +176,7 @@ def _print_table(tag: str, suffix: str) -> None:
 def main() -> None:
     _print_table("roofline_baseline", "")  # paper-faithful arm
     _print_table("roofline_optimized", "_opt")  # post-§Perf arm
+    _print_decode_kernels()  # analytic ragged/paged decode cache traffic
 
 
 if __name__ == "__main__":

@@ -359,10 +359,14 @@ class ServingConfig:
 
     @property
     def pool_pages(self) -> int:
-        """Effective page-pool capacity (resolves the num_pages=0 default)."""
+        """Effective page-pool capacity (resolves the num_pages=0 default).
+        Active requests' KV lives in the pool too (decode attends pages
+        directly through block tables), so the default budgets a full
+        arena of active spans plus two arenas' worth of parked/prefix
+        pages."""
         if self.num_pages:
             return self.num_pages
-        return 2 * self.num_slots * self.pages_per_slot
+        return 3 * self.num_slots * self.pages_per_slot
 
 
 # --------------------------------------------------------------------------- #

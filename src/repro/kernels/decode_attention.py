@@ -24,6 +24,46 @@ NEG_INF = -1e30
 LANES = 128
 
 
+def _pick_block_s(S: int, want: int) -> int:
+    """Largest divisor of ``S`` that is <= ``want``.
+
+    Arena widths are not always powers of two (prompt_len + max_new from a
+    workload spec, e.g. S=160); asserting divisibility made those shapes hard
+    failures. Falling back to the largest divisor keeps the grid exact —
+    every position is covered exactly once, no padding tile."""
+    bs = max(1, min(want, S))
+    while S % bs:
+        bs -= 1
+    return bs
+
+
+def _ragged_block_index(si, lens_b, *, block_s: int, num_blocks: int,
+                        pos_offset: int, window):
+    """Clamp the S-block index for the ragged fetch-skip.
+
+    The grid sweeps ``si = 0..num_blocks-1`` (minor axis) for every
+    (sequence, kv-head) cell, but a slot with ``kv_len`` valid positions
+    only *needs* blocks ``first..last``:
+
+      last  = ceil((kv_len - pos_offset) / block_s) - 1       (tail cutoff)
+      first = (kv_len - window - pos_offset) // block_s       (SWA head cutoff)
+
+    Dead steps clamp to the nearest needed block, so consecutive grid steps
+    map to the *same* block index and Pallas elides the K/V copy entirely —
+    per-slot grid truncation via the scalar-prefetch lane, not just in-kernel
+    masking of a full sweep. The clamped sequence is monotone, so every
+    needed block is still fetched exactly once, and the compute-side
+    ``pl.when(needed)`` guard (unchanged) skips the dead steps' math."""
+    last = (lens_b - pos_offset + block_s - 1) // block_s - 1
+    last = jnp.clip(last, 0, num_blocks - 1)
+    si_c = jnp.minimum(si, last)
+    if window is not None:
+        first = jnp.clip((lens_b - window - pos_offset) // block_s,
+                         0, num_blocks - 1)
+        si_c = jnp.maximum(si_c, first)
+    return si_c
+
+
 def _kernel(
     len_ref,  # scalar prefetch (B,) int32
     q_ref,
@@ -200,8 +240,7 @@ def decode_attention_quant(
     assert H % KVH == 0
     group = H // KVH
     scale = scale if scale is not None else 1.0 / (D**0.5)
-    block_s = min(block_s, S)
-    assert S % block_s == 0
+    block_s = _pick_block_s(S, block_s)
     ns = S // block_s
     qg = q.reshape(B, KVH, group, D)
 
@@ -214,15 +253,21 @@ def decode_attention_quant(
         window=window,
         group=group,
     )
+    ragged = functools.partial(
+        _ragged_block_index, block_s=block_s, num_blocks=ns,
+        pos_offset=pos_offset, window=window,
+    )
+    kv_map = lambda b, kh, si, lens: (b, ragged(si, lens[b]), kh, 0)
+    sc_map = lambda b, kh, si, lens: (b, ragged(si, lens[b]), kh)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, KVH, ns),
         in_specs=[
             pl.BlockSpec((1, 1, group, D), lambda b, kh, si, lens: (b, kh, 0, 0)),
-            pl.BlockSpec((1, block_s, 1, D), lambda b, kh, si, lens: (b, si, kh, 0)),
-            pl.BlockSpec((1, block_s, 1, D), lambda b, kh, si, lens: (b, si, kh, 0)),
-            pl.BlockSpec((1, block_s, 1), lambda b, kh, si, lens: (b, si, kh)),
-            pl.BlockSpec((1, block_s, 1), lambda b, kh, si, lens: (b, si, kh)),
+            pl.BlockSpec((1, block_s, 1, D), kv_map),
+            pl.BlockSpec((1, block_s, 1, D), kv_map),
+            pl.BlockSpec((1, block_s, 1), sc_map),
+            pl.BlockSpec((1, block_s, 1), sc_map),
         ],
         out_specs=[
             pl.BlockSpec((1, group, D), lambda b, kh, si, lens: (b * KVH + kh, 0, 0)),
@@ -264,8 +309,7 @@ def decode_attention(
     assert H % KVH == 0
     group = H // KVH
     scale = scale if scale is not None else 1.0 / (D**0.5)
-    block_s = min(block_s, S)
-    assert S % block_s == 0
+    block_s = _pick_block_s(S, block_s)
     ns = S // block_s
     # reshape q to (B, KVH, group, D): heads are kv-major contiguous
     qg = q.reshape(B, KVH, group, D)
@@ -279,13 +323,18 @@ def decode_attention(
         window=window,
         group=group,
     )
+    ragged = functools.partial(
+        _ragged_block_index, block_s=block_s, num_blocks=ns,
+        pos_offset=pos_offset, window=window,
+    )
+    kv_map = lambda b, kh, si, lens: (b, ragged(si, lens[b]), kh, 0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, KVH, ns),
         in_specs=[
             pl.BlockSpec((1, 1, group, D), lambda b, kh, si, lens: (b, kh, 0, 0)),
-            pl.BlockSpec((1, block_s, 1, D), lambda b, kh, si, lens: (b, si, kh, 0)),
-            pl.BlockSpec((1, block_s, 1, D), lambda b, kh, si, lens: (b, si, kh, 0)),
+            pl.BlockSpec((1, block_s, 1, D), kv_map),
+            pl.BlockSpec((1, block_s, 1, D), kv_map),
         ],
         out_specs=[
             pl.BlockSpec((1, group, D), lambda b, kh, si, lens: (b * KVH + kh, 0, 0)),
@@ -306,4 +355,108 @@ def decode_attention(
         ],
         interpret=interpret,
     )(cache_len.astype(jnp.int32), qg, k, v)
+    return o.reshape(B, H, D), lse.reshape(B, H)
+
+
+def _paged_kernel(
+    len_ref,  # scalar prefetch (B,) int32
+    tbl_ref,  # scalar prefetch (B, T) int32 block tables (unused in body:
+    #           pages are resolved in the BlockSpec index_map)
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    lse_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    block_s: int,
+    num_s_blocks: int,
+    group: int,
+):
+    del tbl_ref
+    _kernel(
+        len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+        scale=scale, block_s=block_s, num_s_blocks=num_s_blocks,
+        pos_offset=0, window=None, group=group,
+    )
+
+
+def paged_decode_attention(
+    q: jax.Array,  # (B, H, D)
+    pool_k: jax.Array,  # (P, page_size, KVH, D) page pool
+    pool_v: jax.Array,  # (P, page_size, KVH, D)
+    tables: jax.Array,  # (B, T) int32 page ids; logical position p lives in
+    #                     pool page tables[b, p // page_size] at offset
+    #                     p % page_size
+    kv_len: jax.Array,  # (B,) int32 valid positions per sequence
+    *,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Flash decode straight through a block table (serving's paged arena).
+
+    Grid (B, KVH, T) with the page axis minor; each step's K/V tile is ONE
+    pool page, picked by the BlockSpec index_map from the scalar-prefetched
+    block table — the kernel never sees a contiguous cache, so the serving
+    engine's page-staging copy (pool -> slot rows before every burst)
+    disappears. Dead steps (``ti`` past ``ceil(kv_len / page_size)``) clamp
+    the table lookup to the last live page: the same fetch-skip trick as
+    :func:`_ragged_block_index`, on table entries instead of raw block
+    indices. Table rows of finished/inactive lanes may point anywhere inside
+    the pool — the in-kernel ``kpos < kv_len`` mask zeroes their
+    contribution, so the outputs of those lanes are well-defined garbage the
+    caller discards. Returns (o (B,H,D), lse (B,H))."""
+    B, H, D = q.shape
+    P, ps, KVH, _ = pool_k.shape
+    T = tables.shape[1]
+    assert H % KVH == 0
+    group = H // KVH
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    qg = q.reshape(B, KVH, group, D)
+
+    kernel = functools.partial(
+        _paged_kernel,
+        scale=scale,
+        block_s=ps,
+        num_s_blocks=T,
+        group=group,
+    )
+
+    def kv_map(b, kh, ti, lens, tbl):
+        last = jnp.clip((lens[b] + ps - 1) // ps - 1, 0, T - 1)
+        return (tbl[b, jnp.minimum(ti, last)], 0, kh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D),
+                         lambda b, kh, ti, lens, tbl: (b, kh, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D), kv_map),
+            pl.BlockSpec((1, ps, 1, D), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, group, D),
+                         lambda b, kh, ti, lens, tbl: (b * KVH + kh, 0, 0)),
+            pl.BlockSpec((1, group),
+                         lambda b, kh, ti, lens, tbl: (b * KVH + kh, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, D), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+        ],
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B * KVH, group, D), q.dtype),
+            jax.ShapeDtypeStruct((B * KVH, group), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), tables.astype(jnp.int32), qg, pool_k, pool_v)
     return o.reshape(B, H, D), lse.reshape(B, H)

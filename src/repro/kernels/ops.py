@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels import flash_attention as _fa
 from repro.kernels import decode_attention as _da
+from repro.kernels import sampling as _sm
 from repro.kernels import ssd as _ssd
 from repro.kernels import rmsnorm as _rn
 
@@ -104,6 +105,81 @@ def decode_attention_quant(
         scale=scale, window=window, pos_offset=pos_offset,
         interpret=(mode == "interpret"),
     )
+
+
+def paged_decode_attention(
+    q, pool_k, pool_v, tables, kv_len, *, scale=None
+) -> Tuple[jax.Array, jax.Array]:
+    """Flash decode straight out of the paged KV pool — the kernel gathers
+    each sequence's pages through its block-table row, so the serving burst
+    never stages pages into contiguous per-slot KV rows. Returns (o, lse)
+    in every mode."""
+    mode = current_mode()
+    if mode == "ref":
+        return _ref.paged_decode_attention(
+            q, pool_k, pool_v, tables, kv_len, scale=scale, return_lse=True
+        )
+    return _da.paged_decode_attention(
+        q, pool_k, pool_v, tables, kv_len, scale=scale,
+        interpret=(mode == "interpret"),
+    )
+
+
+def _row_seeds(keys: jax.Array) -> jax.Array:
+    """Per-row int32 seeds for the fused sampler's counter-based hash RNG,
+    derived from a batch of PRNG keys."""
+    bits = jax.vmap(lambda k: jax.random.bits(k, (), jnp.uint32))(keys)
+    return jax.lax.bitcast_convert_type(bits, jnp.int32)
+
+
+def fused_sample(
+    h, w_head, key, temperature, *, vocab_size=None, top_p: float = 1.0
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused LM-head + sampler for one decode step: (hidden, head weights)
+    -> (sampled token, behaviour logprob of that token under the untempered
+    masked distribution).
+
+    The ref path IS the pre-fusion op sequence (matmul, vocab mask,
+    ``jax.random.categorical``, ``log_softmax`` gather) — bitwise-identical
+    to what ``rl/rollout.generate`` historically computed. The Pallas path
+    streams head-weight tiles and samples via hash-Gumbel-max in-kernel:
+    same distribution, different random stream. ``temperature`` and
+    ``top_p`` are static floats; ``top_p < 1`` routes to the ref path (the
+    kernel's online sweep cannot see the sorted CDF)."""
+    mode = current_mode()
+    if mode == "ref" or top_p < 1.0:
+        return _ref.fused_sample(
+            h, w_head, key, temperature, vocab_size=vocab_size, top_p=top_p
+        )
+    B = h.shape[0]
+    seeds = _row_seeds(jax.random.split(key, B))
+    inv_t = jnp.full(
+        (B,), 0.0 if temperature == 0.0 else 1.0 / temperature, jnp.float32
+    )
+    return _sm.fused_sample(
+        h, w_head, seeds, inv_t, vocab_size=vocab_size,
+        interpret=(mode == "interpret"),
+    )
+
+
+def fused_sample_rows(h, w_head, keys, temps, *, vocab_size=None) -> jax.Array:
+    """Per-row-temperature variant for the serving engine: ``temps`` is a
+    traced (B,) array, rows with ``temps <= 0`` take the argmax. Returns the
+    sampled tokens only (serving keeps no behaviour logprobs)."""
+    mode = current_mode()
+    if mode == "ref":
+        return _ref.fused_sample_rows(
+            h, w_head, keys, temps, vocab_size=vocab_size
+        )
+    seeds = _row_seeds(keys)
+    inv_t = jnp.where(
+        temps <= 0.0, 0.0, 1.0 / jnp.maximum(temps, 1e-6)
+    ).astype(jnp.float32)
+    tok, _ = _sm.fused_sample(
+        h, w_head, seeds, inv_t, vocab_size=vocab_size,
+        interpret=(mode == "interpret"),
+    )
+    return tok
 
 
 def combine_decode_shards(o_parts, lse_parts):

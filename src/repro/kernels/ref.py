@@ -162,6 +162,33 @@ def decode_attention_quant(
     )
 
 
+def paged_decode_attention(
+    q: jax.Array,  # (B, H, D)
+    pool_k: jax.Array,  # (P, page_size, KVH, D)
+    pool_v: jax.Array,  # (P, page_size, KVH, D)
+    tables: jax.Array,  # (B, T) int32 page ids
+    kv_len: jax.Array,  # (B,) int32
+    *,
+    scale: Optional[float] = None,
+    return_lse: bool = False,
+):
+    """Oracle for the paged decode kernel: gather each sequence's pages out
+    of the pool into a contiguous (B, T*page_size, KVH, D) cache and run the
+    standard decode oracle. Positions at and beyond ``kv_len`` are masked
+    identically in both paths, so whatever a table row points at past its
+    live span never reaches the output."""
+    B = q.shape[0]
+    T = tables.shape[1]
+    ps = pool_k.shape[1]
+    idx = tables.astype(jnp.int32).reshape(-1)
+    kg = jnp.take(pool_k, idx, axis=0).reshape(
+        (B, T * ps) + pool_k.shape[2:])
+    vg = jnp.take(pool_v, idx, axis=0).reshape(
+        (B, T * ps) + pool_v.shape[2:])
+    return decode_attention(q, kg, vg, kv_len, scale=scale,
+                            return_lse=return_lse)
+
+
 def combine_decode_shards(o_parts: jax.Array, lse_parts: jax.Array) -> jax.Array:
     """Exactly combine per-shard (o, lse) from a sequence-sharded cache.
 
@@ -173,6 +200,81 @@ def combine_decode_shards(o_parts: jax.Array, lse_parts: jax.Array) -> jax.Array
     num = jnp.sum(o_parts.astype(jnp.float32) * w[..., None], axis=0)
     den = jnp.sum(w, axis=0)[..., None]
     return (num / jnp.maximum(den, 1e-20)).astype(o_parts.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# fused sampling (logits -> temperature -> top-p -> token, one op)
+# --------------------------------------------------------------------------- #
+def _mask_vocab(logits: jax.Array, vocab_size: Optional[int]) -> jax.Array:
+    """Replicates ``lm.mask_padded_vocab`` (including its no-op when the
+    vocab is unpadded — the Python-level check keeps the default bitwise)."""
+    vpad = logits.shape[-1]
+    if vocab_size is None or vocab_size >= vpad:
+        return logits
+    return jnp.where(jnp.arange(vpad) < vocab_size, logits, -1e30)
+
+
+def top_p_filter(logits: jax.Array, top_p: float) -> jax.Array:
+    """Nucleus filter: per row, keep the smallest set of tokens whose
+    cumulative probability reaches ``top_p`` (the top-1 token always
+    survives); everything else drops to NEG_INF. ``top_p >= 1`` returns the
+    input object unchanged (bitwise no-op)."""
+    if top_p >= 1.0:
+        return logits
+    order = jnp.argsort(-logits, axis=-1)
+    sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    # keep while the mass *before* this token is < top_p: position 0 always
+    # kept, and the first token to cross the threshold is included
+    before = jnp.cumsum(probs, axis=-1) - probs
+    keep_sorted = before < top_p
+    keep = jnp.zeros_like(keep_sorted)
+    rows = jnp.arange(logits.shape[0])[:, None]
+    keep = keep.at[rows, order].set(keep_sorted)
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def fused_sample(
+    h: jax.Array,  # (B, d) final hidden state
+    w_head: jax.Array,  # (d, Vp) LM head (tied embed.T or lm_head)
+    key: jax.Array,
+    temperature: float,
+    *,
+    vocab_size: Optional[int] = None,
+    top_p: float = 1.0,
+):
+    """Oracle for the fused decode-step sampler: literally the pre-fusion op
+    sequence (head matmul -> padded-vocab mask -> ``rollout.sample_token``
+    -> untempered log-softmax gather), so the ref dispatch path is
+    bitwise-identical to ``decode_step`` + host sampling. Returns
+    (token (B,), logprob (B,) under the untempered distribution)."""
+    logits = (h @ w_head).astype(jnp.float32)
+    logits = _mask_vocab(logits, vocab_size)
+    if temperature == 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+    else:
+        tok = jax.random.categorical(
+            key, top_p_filter(logits / temperature, top_p), axis=-1)
+    lp = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(h.shape[0]), tok]
+    return tok, lp
+
+
+def fused_sample_rows(
+    h: jax.Array,  # (B, d)
+    w_head: jax.Array,  # (d, Vp)
+    keys: jax.Array,  # (B, 2) per-row PRNG keys
+    temps: jax.Array,  # (B,) per-row temperatures (<= 0 -> greedy)
+    *,
+    vocab_size: Optional[int] = None,
+) -> jax.Array:
+    """Oracle for the serving-engine variant: per-row keys and temperatures
+    (the ``_row_sample`` contract — row-wise independence is what makes a
+    request's tokens invariant to its co-residents). Returns tokens (B,)."""
+    logits = (h @ w_head).astype(jnp.float32)
+    logits = _mask_vocab(logits, vocab_size)
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temps <= 0.0, jnp.argmax(logits, axis=-1), sampled)
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,190 @@
+"""Fused decode-step sampler: LM-head matmul + temperature + Gumbel-max
+sampling + logprob, one Pallas kernel, vocab tile by vocab tile.
+
+The pre-fusion decode step materializes the full (B, padded_vocab) logits in
+HBM, then ``jax.random.categorical`` reads them back (twice, counting the
+logprob gather) — at small batch the decode step is *head-bandwidth* bound,
+not attention bound. This kernel streams the head weight tiles once, keeps
+the per-row online state (running max / sum-exp for the logprob, running
+Gumbel-max winner for the sample) in VMEM scalars, and emits only (token,
+logprob) per row: the logits never exist as an array.
+
+Sampling uses the Gumbel-max trick: ``argmax(z * inv_temp + g)`` with
+``g = -log(-log(u))`` draws exactly from ``softmax(z / temp)``, and an argmax
+folds into the online tile sweep where a CDF inversion would not. Uniforms
+come from a counter-based integer hash (splitmix32 over seed x vocab index):
+stateless, identical in interpret mode and on TPU, and independent per
+(row, token) — statistically equivalent to ``jax.random.categorical``'s
+stream but not bitwise-identical to it (that contract lives in
+``kernels/ops.py``: the ref dispatch path IS the old op sequence).
+
+``inv_temp`` is per row with 0.0 meaning greedy (argmax of the raw logits) —
+one kernel serves both the rollout engine (one shared temperature) and the
+serving engine (per-request temperatures). Per-row seeds arrive through the
+scalar-prefetch lane as int32; inv_temp travels as f32 bits in int32 (SMEM's
+blessed dtype) and is bitcast back in-kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.decode_attention import _pick_block_s
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _hash_u32(x: jax.Array) -> jax.Array:
+    """splitmix32-style avalanche hash on uint32 (wrapping arithmetic)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _uniform_01(seed: jax.Array, pos: jax.Array) -> jax.Array:
+    """Counter-based uniform in the OPEN interval (0, 1): hash (seed, pos),
+    keep 24 bits, center on the half-ulp grid so log(u) and log(-log(u))
+    are always finite."""
+    mixed = pos.astype(jnp.uint32) * jnp.uint32(0x9E3779B1) + seed
+    bits = _hash_u32(mixed) >> jnp.uint32(8)
+    return (bits.astype(jnp.float32) + 0.5) * jnp.float32(1.0 / (1 << 24))
+
+
+def _sample_kernel(
+    seed_ref,  # scalar prefetch (B,) int32 per-row hash seeds
+    it_ref,  # scalar prefetch (B,) int32: f32 inv-temperature bits (0=greedy)
+    h_ref,
+    w_ref,
+    tok_ref,
+    lp_ref,
+    m_ref,
+    l_ref,
+    by_ref,
+    bz_ref,
+    bi_ref,
+    *,
+    block_v: int,
+    num_v_blocks: int,
+    vocab_size: int,
+):
+    b = pl.program_id(0)
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        by_ref[...] = jnp.full_like(by_ref, NEG_INF)
+        bz_ref[...] = jnp.full_like(bz_ref, NEG_INF)
+        bi_ref[...] = jnp.zeros_like(bi_ref)
+
+    z = jax.lax.dot_general(
+        h_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, block_v) untempered logits tile
+    pos = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, (1, block_v), 1)
+    pv = pos < vocab_size
+    z = jnp.where(pv, z, NEG_INF)
+
+    # online log-sum-exp of the untempered logits (for the logprob)
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(z, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.where(pv, jnp.exp(z - m_new), 0.0)
+    l_new = jnp.exp(m_prev - m_new) * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    # Gumbel-max score (greedy rows score the raw logits)
+    inv_temp = jax.lax.bitcast_convert_type(it_ref[b], jnp.float32)
+    seed = seed_ref[b].astype(jnp.uint32)
+    u = _uniform_01(seed, pos)
+    g = -jnp.log(-jnp.log(u))
+    y = jnp.where(inv_temp == 0.0, z, z * inv_temp + g)
+    y = jnp.where(pv, y, NEG_INF)
+
+    # running winner: strictly-better keeps the earliest tile on ties, and
+    # the min-index trick inside a tile matches argmax's first-max rule
+    t_max = jnp.max(y, axis=1, keepdims=True)
+    t_arg = jnp.min(jnp.where(y == t_max, pos, jnp.int32(2**30)),
+                    axis=1, keepdims=True)
+    z_at = jnp.max(jnp.where(pos == t_arg, z, NEG_INF), axis=1, keepdims=True)
+    better = t_max > by_ref[:, :1]
+    by_ref[...] = jnp.broadcast_to(
+        jnp.where(better, t_max, by_ref[:, :1]), by_ref.shape)
+    bz_ref[...] = jnp.broadcast_to(
+        jnp.where(better, z_at, bz_ref[:, :1]), bz_ref.shape)
+    bi_ref[...] = jnp.broadcast_to(
+        jnp.where(better, t_arg, bi_ref[:, :1]), bi_ref.shape)
+
+    @pl.when(vi == num_v_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, :1], 1e-20)
+        lse = m_ref[:, :1] + jnp.log(l)
+        tok_ref[0, :] = jnp.broadcast_to(bi_ref[:, :1], (1, LANES))[0]
+        lp_ref[0, :] = jnp.broadcast_to(
+            bz_ref[:, :1] - lse, (1, LANES))[0]
+
+
+def fused_sample(
+    h: jax.Array,  # (B, d)
+    w_head: jax.Array,  # (d, Vp)
+    seeds: jax.Array,  # (B,) int32 per-row hash seeds
+    inv_temp: jax.Array,  # (B,) f32; 0.0 = greedy, else 1/temperature
+    *,
+    vocab_size: Optional[int] = None,
+    block_v: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused head+sampler. Returns (token (B,) int32, logprob (B,) f32 of the
+    sampled token under the *untempered* masked distribution — the
+    behaviour-logprob contract of ``rl/rollout.generate``)."""
+    B, d = h.shape
+    Vp = w_head.shape[1]
+    vocab = Vp if vocab_size is None else vocab_size
+    block_v = _pick_block_s(Vp, block_v)
+    nv = Vp // block_v
+
+    kernel = functools.partial(
+        _sample_kernel, block_v=block_v, num_v_blocks=nv, vocab_size=vocab)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nv),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, vi, seeds, its: (b, 0)),
+            pl.BlockSpec((d, block_v), lambda b, vi, seeds, its: (0, vi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, LANES), lambda b, vi, seeds, its: (b, 0)),
+            pl.BlockSpec((1, LANES), lambda b, vi, seeds, its: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, LANES), jnp.float32),  # m
+            pltpu.VMEM((1, LANES), jnp.float32),  # l
+            pltpu.VMEM((1, LANES), jnp.float32),  # best gumbel score
+            pltpu.VMEM((1, LANES), jnp.float32),  # best untempered logit
+            pltpu.VMEM((1, LANES), jnp.int32),  # best index
+        ],
+    )
+    it_bits = jax.lax.bitcast_convert_type(
+        inv_temp.astype(jnp.float32), jnp.int32)
+    tok, lp = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((B, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seeds.astype(jnp.int32), it_bits, h, w_head)
+    return tok[:, 0], lp[:, 0]

@@ -59,6 +59,37 @@ class Model:
         return lm.decode_step(self.cfg, params, token, caches, cache_len,
                               unroll=unroll)
 
+    def decode_step_sample(self, params, token, caches, cache_len, key,
+                           temperature, *, top_p: float = 1.0,
+                           unroll: bool = False):
+        """Decode step with the sampler fused behind the kernel dispatch
+        (LM only). Returns (token, behaviour logprob, caches, cache_len+1);
+        the ref dispatch path is bitwise the unfused sequence."""
+        if self.is_encdec:
+            raise NotImplementedError("fused sampling is decoder-only")
+        return lm.decode_step_sample(
+            self.cfg, params, token, caches, cache_len, key, temperature,
+            top_p=top_p, unroll=unroll)
+
+    def decode_step_paged(self, params, token, pool, cache_len, page_tables,
+                          *, write_enable=None, unroll: bool = False):
+        """Paged decode step over a shared page pool (LM only)."""
+        if self.is_encdec:
+            raise NotImplementedError("paged decode is decoder-only")
+        return lm.decode_step_paged(
+            self.cfg, params, token, pool, cache_len, page_tables,
+            write_enable=write_enable, unroll=unroll)
+
+    def decode_step_paged_sample(self, params, token, pool, cache_len,
+                                 page_tables, keys, temps, *,
+                                 write_enable=None, unroll: bool = False):
+        """Paged decode + fused per-row sampling (the serving burst step)."""
+        if self.is_encdec:
+            raise NotImplementedError("paged decode is decoder-only")
+        return lm.decode_step_paged_sample(
+            self.cfg, params, token, pool, cache_len, page_tables, keys,
+            temps, write_enable=write_enable, unroll=unroll)
+
     # ---- continuous-batching rollout engine hooks (LM only) ----
     def prefill_chunk(self, params, tokens, caches, *, offset: int,
                       unroll: bool = False):

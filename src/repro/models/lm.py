@@ -127,6 +127,8 @@ def _attn_mixer(
     cache_len: Optional[jax.Array],
     smax: int,
     chunk_offset: Optional[int] = None,
+    page_tables: Optional[jax.Array] = None,
+    write_enable: Optional[jax.Array] = None,
 ):
     if mode == "full":
         return layers.self_attention(cfg, p, h, positions), None
@@ -196,6 +198,11 @@ def _attn_mixer(
     assert cache is not None and cache_len is not None
     B = h.shape[0]
     q, k_new, v_new = layers.qkv_proj(cfg, p, h, cache_len[:, None])
+    if page_tables is not None:
+        return _decode_paged(
+            cfg, p, q, k_new, v_new, cache, cache_len, page_tables,
+            write_enable,
+        )
     if cfg.kv_quant:
         return _decode_quant(cfg, p, q, k_new, v_new, cache, cache_len)
     kc, vc = cache["k"], cache["v"]
@@ -255,6 +262,37 @@ def _decode_quant(cfg, p, q, k_new, v_new, cache, cache_len):
     return layers.out_proj(cfg, p, o)[:, None], new_cache
 
 
+def _decode_paged(cfg, p, q, k_new, v_new, cache, cache_len, page_tables,
+                  write_enable):
+    """Paged decode step: the cache leaves ARE the serving engine's shared
+    page pool (``(num_pages, page_size, kvh, hd)``); each lane's KV lives in
+    the pages its ``page_tables`` row names. The new token's K/V is written
+    straight into the lane's current page (no staging rows), and the paged
+    flash-decode kernel gathers pages through the table — the burst never
+    materializes contiguous per-slot KV.
+
+    ``write_enable`` (bool (B,), optional) routes retired lanes' writes to
+    an out-of-range page that ``mode="drop"`` discards: a finished slot can
+    keep stepping in the fixed-shape burst without corrupting pool pages it
+    no longer owns. Attention-only, full-window, bf16 caches (the serving
+    engine's admission gate); SWA rings and int8 pools are rejected here."""
+    assert cfg.sliding_window is None, "paged decode: SWA unsupported"
+    assert not cfg.kv_quant, "paged decode: int8 pool unsupported"
+    kc, vc = cache["k"], cache["v"]
+    P, ps = kc.shape[0], kc.shape[1]
+    T = page_tables.shape[1]
+    pidx = jnp.clip(cache_len // ps, 0, T - 1)
+    page = jnp.take_along_axis(page_tables, pidx[:, None], axis=1)[:, 0]
+    off = cache_len % ps
+    if write_enable is not None:
+        page = jnp.where(write_enable, page, P)  # OOB -> dropped below
+    kc = kc.at[page, off].set(k_new[:, 0].astype(kc.dtype), mode="drop")
+    vc = vc.at[page, off].set(v_new[:, 0].astype(vc.dtype), mode="drop")
+    o, _ = ops.paged_decode_attention(q[:, 0], kc, vc, page_tables,
+                                      cache_len + 1)
+    return layers.out_proj(cfg, p, o)[:, None], {"k": kc, "v": vc}
+
+
 def _ssm_mixer(cfg, p, h, mode, cache):
     if mode == "prefill_chunk":
         raise NotImplementedError(
@@ -281,12 +319,17 @@ def _apply_block(
     cache_len: Optional[jax.Array],
     smax: int,
     chunk_offset: Optional[int] = None,
+    page_tables: Optional[jax.Array] = None,
+    write_enable: Optional[jax.Array] = None,
 ):
     mixer_kind, mlp_kind = kind
     hn = layers.apply_norm(cfg, p["norm1"], h)
     if mixer_kind == "attn":
-        mix_out, new_cache = _attn_mixer(cfg, p["attn"], hn, positions, mode, cache, cache_len, smax, chunk_offset)
+        mix_out, new_cache = _attn_mixer(
+            cfg, p["attn"], hn, positions, mode, cache, cache_len, smax,
+            chunk_offset, page_tables, write_enable)
     else:
+        assert page_tables is None, "paged decode: attention-only archs"
         mix_out, new_cache = _ssm_mixer(cfg, p["ssm"], hn, mode, cache)
 
     aux = jnp.zeros((), jnp.float32)
@@ -326,6 +369,8 @@ def backbone(
     remat: bool = False,
     unroll: bool = False,
     chunk_offset: Optional[int] = None,
+    page_tables: Optional[jax.Array] = None,
+    write_enable: Optional[jax.Array] = None,
 ):
     """Returns (h, aux_sum, new_caches).
 
@@ -346,6 +391,7 @@ def backbone(
             h, a, c_out = _apply_block(
                 cfg, group_params[pos], kinds[pos],
                 h, positions, mode, c_in, cache_len, smax, chunk_offset,
+                page_tables, write_enable,
             )
             # sequence-parallel residual stream (Megatron-SP): between
             # blocks the seq dim shards over `model`, so the out-proj's TP
@@ -573,6 +619,30 @@ def prefill(
     return logits, caches, cache_len
 
 
+def _decode_hidden(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,  # (B,) or (B,1)
+    caches,
+    cache_len: jax.Array,  # (B,)
+    *,
+    unroll: bool = False,
+    page_tables: Optional[jax.Array] = None,
+    write_enable: Optional[jax.Array] = None,
+):
+    """Shared decode-step body: embed -> backbone -> last hidden (B, d).
+    With ``page_tables``, ``caches`` is the serving page pool and attention
+    runs through the block table (see :func:`_decode_paged`)."""
+    token = token.reshape(-1, 1)
+    h = embed_tokens(cfg, params, token)
+    h, _, new_caches = backbone(
+        cfg, params, h, None, mode="decode", caches=caches, cache_len=cache_len,
+        smax=0, unroll=unroll, page_tables=page_tables,
+        write_enable=write_enable,
+    )
+    return h[:, 0], new_caches
+
+
 def decode_step(
     cfg: ModelConfig,
     params: Params,
@@ -582,15 +652,81 @@ def decode_step(
     unroll: bool = False,
 ):
     """One decode step. Returns (logits (B,V), new_caches, cache_len+1)."""
-    token = token.reshape(-1, 1)
-    h = embed_tokens(cfg, params, token)
-    h, _, new_caches = backbone(
-        cfg, params, h, None, mode="decode", caches=caches, cache_len=cache_len,
-        smax=0, unroll=unroll,
-    )
-    logits = (h[:, 0] @ _head_matrix(cfg, params)).astype(jnp.float32)
+    h, new_caches = _decode_hidden(
+        cfg, params, token, caches, cache_len, unroll=unroll)
+    logits = (h @ _head_matrix(cfg, params)).astype(jnp.float32)
     logits = mask_padded_vocab(cfg, logits)
     return logits, new_caches, cache_len + 1
+
+
+def decode_step_sample(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,  # (B,) or (B,1)
+    caches,
+    cache_len: jax.Array,  # (B,)
+    key: jax.Array,
+    temperature: float,  # static; 0.0 = greedy
+    *,
+    top_p: float = 1.0,  # static; < 1.0 routes dispatch to the ref path
+    unroll: bool = False,
+):
+    """One decode step with the sampler fused behind the kernel dispatch:
+    the (B, padded_vocab) logits never leave the op (``ops.fused_sample``).
+    Returns (sampled token (B,), behaviour logprob (B,) under the untempered
+    masked distribution, new_caches, cache_len+1). The ref dispatch path is
+    bitwise-identical to ``decode_step`` + ``rollout.sample_token`` +
+    ``log_softmax`` gather."""
+    h, new_caches = _decode_hidden(
+        cfg, params, token, caches, cache_len, unroll=unroll)
+    tok, lp = ops.fused_sample(
+        h, _head_matrix(cfg, params), key, temperature,
+        vocab_size=cfg.vocab_size, top_p=top_p,
+    )
+    return tok, lp, new_caches, cache_len + 1
+
+
+def decode_step_paged(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,  # (B,) or (B,1)
+    pool,  # init_caches(num_pages, page_size) tree — the shared page pool
+    cache_len: jax.Array,  # (B,)
+    page_tables: jax.Array,  # (B, T) int32 pool-page ids per lane
+    *,
+    write_enable: Optional[jax.Array] = None,  # bool (B,); False = retired
+    unroll: bool = False,
+):
+    """Paged decode step over the serving page pool. Returns
+    (logits (B,V), new_pool, cache_len+1)."""
+    h, new_pool = _decode_hidden(
+        cfg, params, token, pool, cache_len, unroll=unroll,
+        page_tables=page_tables, write_enable=write_enable)
+    logits = (h @ _head_matrix(cfg, params)).astype(jnp.float32)
+    return mask_padded_vocab(cfg, logits), new_pool, cache_len + 1
+
+
+def decode_step_paged_sample(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,  # (B,) or (B,1)
+    pool,
+    cache_len: jax.Array,  # (B,)
+    page_tables: jax.Array,  # (B, T) int32
+    keys: jax.Array,  # (B, 2) uint32 per-row PRNG keys
+    temps: jax.Array,  # (B,) f32; <= 0 means greedy
+    *,
+    write_enable: Optional[jax.Array] = None,
+    unroll: bool = False,
+):
+    """Paged decode + fused per-row sampling (the serving burst step).
+    Returns (sampled token (B,), new_pool, cache_len+1)."""
+    h, new_pool = _decode_hidden(
+        cfg, params, token, pool, cache_len, unroll=unroll,
+        page_tables=page_tables, write_enable=write_enable)
+    tok = ops.fused_sample_rows(
+        h, _head_matrix(cfg, params), keys, temps, vocab_size=cfg.vocab_size)
+    return tok, new_pool, cache_len + 1
 
 
 def prefill_chunk(

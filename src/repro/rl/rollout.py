@@ -34,10 +34,21 @@ class RolloutResult(NamedTuple):
     role_mask: Optional[jax.Array] = None
 
 
-def sample_token(logits: jax.Array, key, temperature: float) -> jax.Array:
+def sample_token(
+    logits: jax.Array, key, temperature: float, top_p: float = 1.0
+) -> jax.Array:
+    """Temperature (then nucleus) sampling; ``temperature == 0`` is greedy.
+    ``top_p`` filters AFTER temperature scaling, keeping the smallest
+    prefix of the sorted distribution whose mass reaches ``top_p`` (the
+    top-1 token is always kept). The default ``top_p=1.0`` is bitwise the
+    historical behaviour — the filter is skipped at the Python level."""
     if temperature == 0.0:
         return jnp.argmax(logits, axis=-1)
-    return jax.random.categorical(key, logits / temperature, axis=-1)
+    scaled = logits / temperature
+    if top_p < 1.0:
+        from repro.kernels import ref as _kref
+        scaled = _kref.top_p_filter(scaled, top_p)
+    return jax.random.categorical(key, scaled, axis=-1)
 
 
 def generate(
@@ -48,6 +59,7 @@ def generate(
     *,
     max_new: int,
     temperature: float = 1.0,
+    top_p: float = 1.0,
     eos_id: Optional[int] = None,
     pad_id: int = 0,
     budgets: Optional[jax.Array] = None,  # (B,) per-sequence response caps
@@ -69,15 +81,18 @@ def generate(
     logits, caches, cache_len = model.prefill(params, prompt, smax=smax, **kw)
 
     k0, key = jax.random.split(key)
-    tok0 = sample_token(logits, k0, temperature)
+    tok0 = sample_token(logits, k0, temperature, top_p)
     lp0 = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(B), tok0]
 
     def body(carry, xs):
         step_key, j = xs  # j: 0-based scan step, emitting response pos j+2
         tok, caches, cache_len, done = carry
-        logits, caches, cache_len = model.decode_step(params, tok, caches, cache_len)
-        nxt = sample_token(logits, step_key, temperature)
-        lp = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(B), nxt]
+        # fused decode+sample: the (B, vocab) logits stay behind the kernel
+        # dispatch (ref mode is bitwise the old decode_step + sample_token +
+        # log_softmax-gather sequence)
+        nxt, lp, caches, cache_len = model.decode_step_sample(
+            params, tok, caches, cache_len, step_key, temperature, top_p=top_p
+        )
         nxt = jnp.where(done, pad_id, nxt)
         lp = jnp.where(done, 0.0, lp)
         new_done = done | ((nxt == eos_id) if eos_id is not None else False)

@@ -248,6 +248,7 @@ class ContinuousRolloutEngine:
         *,
         max_new: int,
         temperature: float = 1.0,
+        top_p: float = 1.0,
         eos_id: Optional[int] = None,
         pad_id: int = 0,
         num_slots: int = 0,
@@ -267,6 +268,7 @@ class ContinuousRolloutEngine:
         self.model = model
         self.max_new = max_new
         self.temperature = temperature
+        self.top_p = top_p
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.num_slots = num_slots
@@ -332,7 +334,7 @@ class ContinuousRolloutEngine:
         scalar bucket width for refills, a per-lane vector for
         continuations."""
         eos, pad, max_new = self.eos_id, self.pad_id, self.max_new
-        tok0 = sample_token(logits, key, self.temperature)
+        tok0 = sample_token(logits, key, self.temperature, self.top_p)
         lane = jnp.arange(R)
         lp0 = jax.nn.log_softmax(logits, axis=-1)[lane, tok0]
         done0 = (tok0 == eos) if eos is not None else jnp.zeros((R,), bool)
@@ -418,7 +420,7 @@ class ContinuousRolloutEngine:
         as soon as (a) every slot is done — the early-exit on a drained
         queue — or (b) any slot *newly* finishes while prompts are pending,
         handing control back to the host for an immediate refill."""
-        model, temp = self.model, self.temperature
+        model, temp, top_p = self.model, self.temperature, self.top_p
         eos, pad, max_new = self.eos_id, self.pad_id, self.max_new
         T = max_new - 1  # lockstep's decode-step count (key schedule length)
         threshold = self.refill_threshold
@@ -438,9 +440,6 @@ class ContinuousRolloutEngine:
                 (caches, cur_tok, cache_len, resp_len, done, budget,
                  out_tok, out_lp, t, occ) = st
                 occ = occ + jnp.sum(~done)
-                logits, caches, cache_len = model.decode_step(
-                    params, cur_tok, caches, cache_len
-                )
                 # lockstep's exact key schedule for the first T steps
                 # (jax.random.split is NOT prefix-stable, so the array is
                 # sized exactly T); steps beyond T — which only exist after
@@ -450,8 +449,11 @@ class ContinuousRolloutEngine:
                     step_keys[jnp.minimum(t, T - 1)],
                     jax.random.fold_in(k2, t),
                 )
-                nxt = sample_token(logits, kt, temp)
-                lp = jax.nn.log_softmax(logits, axis=-1)[lane, nxt]
+                # fused decode+sample: logits never materialize outside the
+                # kernel dispatch (ref mode is bitwise the old sequence)
+                nxt, lp, caches, cache_len = model.decode_step_sample(
+                    params, cur_tok, caches, cache_len, kt, temp, top_p=top_p
+                )
                 nxt = jnp.where(done, pad, nxt)
                 lp = jnp.where(done, 0.0, lp)
                 wr = (~done) & (resp_len < max_new)

@@ -13,20 +13,26 @@ update". Concretely, per scheduler visit (one ``step()``):
      flushed token delta is tagged with the version that decoded it (the
      prefix cache is cleared on swap — cached KV is version-scoped);
   2. **admit** — pop the longest-waiting work from the
-     :class:`AdmissionQueue`: parked requests resume by scattering their
-     pooled pages back into a free slot (zero recompute); fresh requests
-     are matched against the radix prefix cache, their cached pages are
-     scattered in, and only the uncached tail of the prompt is prefilled —
-     in ``page_size`` chunks through per-chunk compiled executables, so a
-     cache hit is bitwise-identical to the cold prefill of the same
-     request (the hit path *skips* leading chunks; it never recomputes
-     them differently);
+     :class:`AdmissionQueue`: parked requests resume by pointing a free
+     slot's block-table row back at the pages they never stopped owning
+     (zero recompute, zero device copies); fresh requests are matched
+     against the radix prefix cache, their cached pages are staged in, and
+     only the uncached tail of the prompt is prefilled — in ``page_size``
+     chunks through per-chunk compiled executables, so a cache hit is
+     bitwise-identical to the cold prefill of the same request (the hit
+     path *skips* leading chunks; it never recomputes them differently).
+     The prefilled KV is then copied once into pool pages the request owns
+     exclusively for its whole lifetime (copy-on-admit);
   3. **decode burst** — a jitted ``lax.while_loop`` stepping every slot up
      to ``decode_burst`` times, exiting early when any slot finishes (its
-     KV pages and slot go straight back into circulation). Sampling keys
-     are per-request and per-position (``fold_in(fold_in(base, seed),
-     position)``), so a request's tokens are independent of slot placement,
-     co-resident traffic, and park/resume timing;
+     KV pages and slot go straight back into circulation). Decode runs
+     *directly on the page pool* through each slot's block-table row (the
+     paged flash-decode kernel + fused per-row sampler behind
+     ``model.decode_step_paged_sample``) — there is no page-staging copy
+     and no separate slot KV arena. Sampling keys are per-request and
+     per-position (``fold_in(fold_in(base, seed), position)``), so a
+     request's tokens are independent of slot placement, co-resident
+     traffic, and park/resume timing;
   4. **flush** — one bundled host sync; new tokens are appended to each
      request's :class:`RequestStream` with a timestamp (TTFT/TPOT) and the
      current weight version; finished slots free; under ``yield_quota``,
@@ -131,7 +137,10 @@ class ServingEngine:
         self.streams: Dict[int, RequestStream] = {}
 
         # device slot state ------------------------------------------------
-        self.caches = model.init_caches(S, W)
+        # No slot KV arena: decode attends the page pool directly through
+        # per-slot block-table rows (T_max = max pages a request can span).
+        self.T_max = W // ps
+        self.tables_dev = jnp.zeros((S, self.T_max), jnp.int32)
         self.cur_tok = jnp.zeros((S,), jnp.int32)
         self.cache_len = jnp.zeros((S,), jnp.int32)
         self.resp_len = jnp.zeros((S,), jnp.int32)
@@ -143,6 +152,9 @@ class ServingEngine:
 
         # host slot state --------------------------------------------------
         self.active: List[Optional[_Active]] = [None] * S
+        # pool pages each busy slot owns exclusively (admission -> finish;
+        # parked requests keep theirs in the arena's park table meanwhile)
+        self._slot_pages: List[List[int]] = [[] for _ in range(S)]
 
         # jit caches -------------------------------------------------------
         self._chunk_jit: Dict[tuple, callable] = {}
@@ -208,19 +220,19 @@ class ServingEngine:
         return fn
 
     def _admit_fn(self, R: int):
-        """Admission epilogue: scatter the freshly prefilled rows over the
-        arena, sample each lane's first token (per-request key, position 0),
-        and seed the slot arrays. Out-of-range slot ids drop (pad lanes)."""
+        """Admission epilogue: point the slots' block-table rows at the
+        lanes' own pool pages, sample each lane's first token (per-request
+        key, position 0), and seed the slot arrays. Out-of-range slot ids
+        drop (pad lanes)."""
         fn = self._admit_jit.get(R)
         if fn is None:
-            model, eos, pad = self.model, self.eos_id, self.pad_id
+            eos, pad = self.eos_id, self.pad_id
             W_out = self.scfg.max_new
 
-            def admit(params, caches, rows, slots, logits, req_keys,
+            def admit(slots, logits, req_keys, lane_tables,
                       lane_len, lane_budget, lane_temp,
                       cur_tok, cache_len, resp_len, done, budget, temp,
-                      slot_keys, out_tok):
-                caches = model.scatter_cache_rows(caches, rows, slots)
+                      slot_keys, tables_dev, out_tok):
                 k0 = jax.vmap(lambda k: jax.random.fold_in(k, 0))(req_keys)
                 tok0 = _row_sample(logits, k0, lane_temp)
                 done0 = (tok0 == eos) if eos is not None else jnp.zeros(
@@ -235,9 +247,11 @@ class ServingEngine:
                 budget = budget.at[slots].set(lane_budget, mode="drop")
                 temp = temp.at[slots].set(lane_temp, mode="drop")
                 slot_keys = slot_keys.at[slots].set(req_keys, mode="drop")
+                tables_dev = tables_dev.at[slots].set(
+                    lane_tables, mode="drop")
                 out_tok = out_tok.at[slots].set(row, mode="drop")
-                return (caches, cur_tok, cache_len, resp_len, done, budget,
-                        temp, slot_keys, out_tok, tok0, done0)
+                return (cur_tok, cache_len, resp_len, done, budget,
+                        temp, slot_keys, tables_dev, out_tok, tok0, done0)
 
             fn = self._admit_jit[R] = jax.jit(admit)
         return fn
@@ -245,11 +259,20 @@ class ServingEngine:
     def _make_burst(self, S: int):
         """The decode loop: up to ``decode_burst`` steps over every slot,
         exiting early the moment any slot newly finishes (so its pages and
-        lane recycle immediately) or everything is done."""
+        lane recycle immediately) or everything is done.
+
+        Decode runs straight on the page pool: the paged flash-decode
+        kernel gathers each slot's K/V through its block-table row and the
+        per-row sampler is fused behind the kernel dispatch
+        (``model.decode_step_paged_sample``) — no page staging, no slot KV
+        arena, no (S, vocab) logits round-trip in the Pallas modes.
+        Retired lanes keep stepping until the loop exits; ``write_enable``
+        routes their pool writes to a dropped out-of-range page so they
+        cannot corrupt pages they no longer own."""
         model, eos, pad = self.model, self.eos_id, self.pad_id
         W_out, cap = self.scfg.max_new, self.scfg.decode_burst
 
-        def burst(params, caches, cur_tok, cache_len, resp_len, done,
+        def burst(params, pool, tables, cur_tok, cache_len, resp_len, done,
                   budget, temp, slot_keys, out_tok):
             n_done_entry = jnp.sum(done)
             lane = jnp.arange(S)
@@ -260,13 +283,13 @@ class ServingEngine:
                         & (jnp.sum(done) == n_done_entry))
 
             def body(st):
-                (caches, cur_tok, cache_len, resp_len, done, budget,
+                (pool, cur_tok, cache_len, resp_len, done, budget,
                  temp, slot_keys, out_tok, t, occ) = st
                 occ = occ + jnp.sum(~done)
-                logits, caches, cache_len = model.decode_step(
-                    params, cur_tok, caches, cache_len)
                 keys_t = jax.vmap(jax.random.fold_in)(slot_keys, resp_len)
-                nxt = _row_sample(logits, keys_t, temp)
+                nxt, pool, cache_len = model.decode_step_paged_sample(
+                    params, cur_tok, pool, cache_len, tables, keys_t, temp,
+                    write_enable=~done)
                 nxt = jnp.where(done, pad, nxt)
                 wr = (~done) & (resp_len < W_out)
                 idx = jnp.where(wr, resp_len, W_out)  # OOB -> dropped
@@ -276,10 +299,10 @@ class ServingEngine:
                 if eos is not None:
                     new_done = new_done | ((~done) & (nxt == eos))
                 new_done = new_done | (resp_len >= budget)
-                return (caches, nxt, cache_len, resp_len, new_done, budget,
+                return (pool, nxt, cache_len, resp_len, new_done, budget,
                         temp, slot_keys, out_tok, t + 1, occ)
 
-            st = (caches, cur_tok, cache_len, resp_len, done, budget,
+            st = (pool, cur_tok, cache_len, resp_len, done, budget,
                   temp, slot_keys, out_tok, jnp.zeros((), jnp.int32),
                   jnp.zeros((), jnp.int32))
             return jax.lax.while_loop(cond, body, st)
@@ -300,12 +323,12 @@ class ServingEngine:
                 self.arena.free(self.prefix_cache.evict(need))
             return self.arena.alloc(n)  # may still raise: pool truly full
 
-    def _commit_prompt_pages(self, slot: int, prompt: np.ndarray,
+    def _commit_prompt_pages(self, rows, lane: int, prompt: np.ndarray,
                              matched: int) -> None:
         """Commit the prompt's uncached full pages (beyond the ``matched``
-        prefix) into the radix cache, copying their KV out of the slot's
-        freshly prefilled rows. Pool pressure stops the commit early —
-        serving never fails because the cache is full."""
+        prefix) into the radix cache, copying their KV out of the lane's
+        freshly prefilled admission rows. Pool pressure stops the commit
+        early — serving never fails because the cache is full."""
         ps = self.scfg.page_size
         n_full = len(prompt) // ps
         if self.prefix_cache is None or n_full * ps <= matched:
@@ -324,7 +347,7 @@ class ServingEngine:
         if new_pages:
             start = new_pages[0][0]
             ids = [pid for _, pid in new_pages]
-            self.arena.save_rows(self.caches, slot, ids, start_page=start)
+            self.arena.save_rows(rows, lane, ids, start_page=start)
 
     # ------------------------------------------------------------------ #
     # admission
@@ -340,10 +363,20 @@ class ServingEngine:
         return stream
 
     def _admit_fresh(self, reqs: List[Request], lb: int,
-                     lanes: List[int]) -> None:
+                     lanes: List[int]) -> bool:
         """Admit one length bucket of fresh requests: prefix-match each,
         then prefill sub-groups that share a matched length (identical
-        chunk schedules) as one padded lane batch."""
+        chunk schedules) as one padded lane batch.
+
+        Copy-on-admit page ownership: BEFORE prefilling, each lane
+        allocates every pool page its lifetime can touch
+        (``ceil((lb + budget - 1) / page_size)``) and owns them exclusively
+        until finish. The prefilled KV — matched prefix included — is
+        copied into them once, so prefix pins release immediately and
+        park/resume later needs no copies and no allocations. Returns
+        False on a pool-page stall (the stalled group and every
+        not-yet-admitted group return to the queue head; the caller falls
+        back to parked work, which needs zero new pages)."""
         ps, S, W = self.scfg.page_size, self.scfg.num_slots, self.scfg.max_len
         groups: Dict[int, List[Request]] = {}
         matches: Dict[int, tuple] = {}
@@ -355,8 +388,28 @@ class ServingEngine:
             matches[r.rid] = (m, ids)
             groups.setdefault(m, []).append(r)
 
-        for m, group in groups.items():
+        pending = list(groups.items())
+        for gi, (m, group) in enumerate(pending):
             n = len(group)
+            budgets = [min(r.max_new, self.scfg.max_new, W - lb)
+                       for r in group]
+            n_own = [-(-(lb + b - 1) // ps) for b in budgets]
+            try:
+                flat = self._alloc_pages(sum(n_own))
+            except ArenaOutOfPages:
+                stalled: List[Request] = []
+                for m2, g2 in pending[gi:]:
+                    for r in g2:
+                        if self.prefix_cache is not None:
+                            self.prefix_cache.release(r.prompt, m2)
+                        stalled.append(r)
+                self.queue.requeue(stalled)
+                return False
+            own = []
+            for k in n_own:
+                own.append(flat[:k])
+                flat = flat[k:]
+
             R = 1
             while R < n:
                 R *= 2
@@ -367,10 +420,12 @@ class ServingEngine:
             batch = np.zeros((R, lb), np.int32)
             lane_budget = np.full(R, 1, np.int32)
             lane_temp = np.zeros(R, np.float32)
+            lane_tables = np.zeros((R, self.T_max), np.int32)
             for j, r in enumerate(group):
                 batch[j, : len(r.prompt)] = r.prompt
-                lane_budget[j] = min(r.max_new, self.scfg.max_new, W - lb)
+                lane_budget[j] = budgets[j]
                 lane_temp[j] = r.temperature
+                lane_tables[j, : n_own[j]] = own[j]
                 self.prompt_tokens += len(r.prompt)
                 self.streams[r.rid].matched_prefix_tokens = m
             req_keys = jnp.stack(
@@ -388,14 +443,22 @@ class ServingEngine:
                 logits, rows = self._chunk_fn(R, off)(
                     self._params, jnp.asarray(batch[:, off:off + ps]), rows)
                 self.prefill_chunks += 1
-            (self.caches, self.cur_tok, self.cache_len, self.resp_len,
+            # copy every lane's prefilled span into its own pool pages in
+            # one dispatch — from here the requests' KV lives ONLY in the
+            # pool (the admission rows are scratch) and decode writes
+            # continue at page lb/ps, offset 0 (lb is page-aligned by the
+            # bucketing; all lanes share it, so the copy is rectangular)
+            self.arena.save_rows(
+                rows, np.arange(n), [own[j][: lb // ps] for j in range(n)])
+            (self.cur_tok, self.cache_len, self.resp_len,
              self.done, self.budget, self.temp, self.slot_keys,
-             self.out_tok, tok0, done0) = self._admit_fn(R)(
-                self._params, self.caches, rows, slots_arr, logits,
-                req_keys, jnp.full((R,), lb, jnp.int32),
+             self.tables_dev, self.out_tok, tok0, done0) = self._admit_fn(R)(
+                slots_arr, logits, req_keys, jnp.asarray(lane_tables),
+                jnp.full((R,), lb, jnp.int32),
                 jnp.asarray(lane_budget), jnp.asarray(lane_temp),
                 self.cur_tok, self.cache_len, self.resp_len, self.done,
-                self.budget, self.temp, self.slot_keys, self.out_tok)
+                self.budget, self.temp, self.slot_keys, self.tables_dev,
+                self.out_tok)
 
             tok0_h, done0_h = jax.device_get((tok0, done0))
             when = self.now()
@@ -404,7 +467,8 @@ class ServingEngine:
                 st.append([tok0_h[j]], when, self._weight_version)
                 self.total_tokens += 1
                 self.active[gl[j]] = _Active(r, st, flushed=1)
-                self._commit_prompt_pages(gl[j], r.prompt, m)
+                self._slot_pages[gl[j]] = own[j]
+                self._commit_prompt_pages(rows, j, r.prompt, m)
                 if self.prefix_cache is not None:
                     self.prefix_cache.release(r.prompt, m)
                 if done0_h[j]:
@@ -412,14 +476,22 @@ class ServingEngine:
                               and tok0_h[j] == self.eos_id else "budget")
                     st.finish(reason)
                     self.active[gl[j]] = None
+                    self.arena.free(self._slot_pages[gl[j]])
+                    self._slot_pages[gl[j]] = []
+        return True
 
     def _resume_parked(self, items: List[_Parked], lanes: List[int]) -> None:
-        """Resume parked requests: pages back into slot rows, state back
-        into the slot arrays, zero recompute. Pages recycle immediately."""
+        """Resume parked requests: metadata only. The request's KV never
+        left its own pool pages, so resuming is pointing a free slot's
+        block-table row back at them and restoring the device scalars —
+        zero recompute, zero device copies, zero new pages."""
         for p, slot in zip(items, lanes):
-            self.caches = self.arena.load_rows(
-                self.caches, [slot], [p.page_ids])
-            self.arena.free(self.arena.unpark(p.req.rid))
+            ids = self.arena.unpark(p.req.rid)
+            self._slot_pages[slot] = ids
+            row = np.zeros(self.T_max, np.int32)
+            row[: len(ids)] = ids
+            self.tables_dev = self.tables_dev.at[slot].set(
+                jnp.asarray(row, jnp.int32))
             req_key = jax.random.fold_in(self._base_key, p.req.seed)
             s = jnp.asarray([slot], jnp.int32)
             self.cur_tok = self.cur_tok.at[s].set(p.cur_tok)
@@ -434,6 +506,7 @@ class ServingEngine:
             self.resumes += 1
 
     def _admit(self) -> None:
+        stalled = False
         while len(self.queue):
             # recompute each round: immediately-done admissions (EOS or a
             # one-token budget on the first sample) free their lane again
@@ -441,11 +514,27 @@ class ServingEngine:
                     if self.active[s] is None]
             if not free:
                 return
+            if stalled:
+                # fresh admission ran out of pool pages this visit; only
+                # parked work (which already owns its pages) can still
+                # come in. Finishing it returns pages, unsticking fresh
+                # admission on the next visit.
+                items = self.queue.pop_parked(len(free))
+                if not items:
+                    if self.num_active == 0:
+                        raise ArenaOutOfPages(
+                            "admission stalled on an idle engine: the pool "
+                            "cannot hold one request's pages even after "
+                            "evicting the prefix cache (raise "
+                            "ServingConfig.pool_pages)")
+                    return
+                self._resume_parked(items, free[: len(items)])
+                continue
             kind, lb, items = self.queue.pop_work(len(free))
             if kind == "parked":
                 self._resume_parked(items, free[: len(items)])
             else:
-                self._admit_fresh(items, lb, free[: len(items)])
+                stalled = not self._admit_fresh(items, lb, free[: len(items)])
 
     # ------------------------------------------------------------------ #
     # the scheduler visit
@@ -490,21 +579,21 @@ class ServingEngine:
                           and last == self.eos_id else "budget")
                 a.stream.finish(reason)
                 self.active[s] = None
+                if self._slot_pages[s]:
+                    self.arena.free(self._slot_pages[s])
+                    self._slot_pages[s] = []
             elif quota and fresh_waiting > 0 and a.since_admit >= quota:
                 self._park(s, a, cur_h[s], clen_h[s], n, int(budget_h[s]))
                 fresh_waiting -= 1
 
     def _park(self, slot: int, a: _Active, cur_tok: int, cache_len: int,
               resp_len: int, budget: int) -> None:
-        """Fair-share preemption: save the slot's KV to pages, free the
-        slot, and re-queue the request as a parked continuation."""
-        ps = self.scfg.page_size
-        k = -(-int(cache_len) // ps)
-        try:
-            ids = self._alloc_pages(k)
-        except ArenaOutOfPages:
-            return  # pool full: keep decoding, park next visit
-        self.arena.save_rows(self.caches, slot, ids)
+        """Fair-share preemption, metadata only: the slot's KV already
+        lives in pool pages the request owns, so parking hands those pages
+        to the arena's park table and frees the lane. No allocation, no
+        copy — parking cannot fail."""
+        ids = self._slot_pages[slot]
+        self._slot_pages[slot] = []
         self.arena.park(a.req.rid, ids)
         self.queue.push_parked(_Parked(
             a.req, a.stream, ids, cache_len, resp_len, cur_tok,
@@ -519,12 +608,12 @@ class ServingEngine:
         self.poll_weights()
         self._admit()
         if self.num_active:
-            (self.caches, self.cur_tok, self.cache_len, self.resp_len,
+            (self.arena.pool, self.cur_tok, self.cache_len, self.resp_len,
              self.done, self.budget, self.temp, self.slot_keys,
              self.out_tok, t, occ) = self._burst(
-                self._params, self.caches, self.cur_tok, self.cache_len,
-                self.resp_len, self.done, self.budget, self.temp,
-                self.slot_keys, self.out_tok)
+                self._params, self.arena.pool, self.tables_dev,
+                self.cur_tok, self.cache_len, self.resp_len, self.done,
+                self.budget, self.temp, self.slot_keys, self.out_tok)
             self.bursts += 1
             self.decode_steps += int(jax.device_get(t))
             self.active_lane_steps += int(jax.device_get(occ))

@@ -146,20 +146,25 @@ class PagedKVArena:
             fn = self._fetch_jit[k] = jax.jit(fetch)
         return fn
 
-    def save_rows(self, caches, slot: int, page_ids: List[int],
+    def save_rows(self, caches, slots, page_tables,
                   start_page: int = 0):
-        """Copy pages ``[start_page, start_page + len(page_ids))`` of slot
-        ``slot``'s rows into the pool at ``page_ids`` (page-granular gather
-        -> pool write). ``start_page > 0`` is the prefix-commit path: matched
-        pages are cache-owned and shared, so only the newly prefilled tail
-        pages are copied out."""
-        k = len(page_ids)
-        if k == 0:
+        """Copy pages ``[start_page, start_page + k)`` of the given slot
+        rows into the pool (page-granular gather -> pool write). ``slots``
+        is one slot id with a flat page-id list, or a sequence of slots
+        with a (R, k) table — all lanes copy in ONE dispatch (the
+        copy-on-admit path batches a whole admission group this way).
+        ``start_page > 0`` is the prefix-commit path: matched pages are
+        cache-owned and shared, so only the newly prefilled tail pages are
+        copied out."""
+        if np.ndim(slots) == 0:
+            slots, page_tables = [slots], [page_tables]
+        tables = np.asarray(page_tables, np.int32)
+        if tables.size == 0:
             return
-        self.pool = self._store_fn(start_page, k)(
+        self.pool = self._store_fn(start_page, tables.shape[1])(
             self.pool, caches,
-            jnp.asarray([slot], jnp.int32),
-            jnp.asarray(np.asarray(page_ids, np.int32)[None, :]))
+            jnp.asarray(np.asarray(slots, np.int32)),
+            jnp.asarray(tables))
 
     def load_rows(self, caches, slots: Sequence[int], page_tables):
         """Scatter pooled pages into the arena rows at ``slots``: lane ``j``

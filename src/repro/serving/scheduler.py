@@ -131,6 +131,7 @@ class AdmissionQueue:
         self._fresh: Dict[int, Deque[Tuple[int, Request]]] = {}
         self._parked: Deque[Tuple[int, _Parked]] = deque()
         self._seq = itertools.count()  # global enqueue order (age proxy)
+        self._neg = itertools.count(-1, -1)  # requeue ages: older than live
 
     def __len__(self) -> int:
         return (sum(len(q) for q in self._fresh.values())
@@ -173,6 +174,23 @@ class AdmissionQueue:
         if not q:
             del self._fresh[best]
         return "fresh", best, take
+
+    def pop_parked(self, n: int) -> List[_Parked]:
+        """Up to ``n`` parked items out of age order — the page-stall escape
+        hatch: a parked resume needs ZERO new pool pages (its KV already
+        lives in pages it owns), so when fresh admission stalls on pool
+        pages the engine drains parked work instead of deadlocking."""
+        return [self._parked.popleft()[1]
+                for _ in range(min(n, len(self._parked)))]
+
+    def requeue(self, reqs: List[Request]) -> None:
+        """Return popped-but-unadmitted fresh requests to the head of their
+        buckets with priority preserved (negative ages sort older than any
+        live enqueue) after an admission stall."""
+        for r in reversed(reqs):
+            lb = self.bucket_len(len(r.prompt))
+            self._fresh.setdefault(lb, deque()).appendleft(
+                (next(self._neg), r))
 
 
 # --------------------------------------------------------------------------- #

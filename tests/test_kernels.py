@@ -13,8 +13,14 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as fa_pallas
-from repro.kernels.decode_attention import decode_attention as da_pallas
-from repro.kernels.decode_attention import decode_attention_quant as daq_pallas
+from repro.kernels.decode_attention import (
+    _pick_block_s,
+    _ragged_block_index,
+    decode_attention as da_pallas,
+    decode_attention_quant as daq_pallas,
+    paged_decode_attention as pda_pallas,
+)
+from repro.kernels.sampling import fused_sample as fs_pallas
 from repro.kernels.ssd import ssd as ssd_pallas
 from repro.kernels.rmsnorm import rmsnorm as rn_pallas
 
@@ -108,6 +114,74 @@ def test_decode_attention_sharded_combine():
     np.testing.assert_allclose(np.array(o_comb), np.array(o_full), atol=2e-5, rtol=2e-5)
 
 
+def test_pick_block_s_largest_divisor():
+    assert _pick_block_s(256, 64) == 64
+    assert _pick_block_s(160, 64) == 40   # non-power-of-two arena width
+    assert _pick_block_s(160, 512) == 160
+    assert _pick_block_s(7, 4) == 1       # prime: falls to 1, grid still exact
+    assert _pick_block_s(96, 64) == 48
+    for S in (96, 160, 192, 250):
+        bs = _pick_block_s(S, 64)
+        assert S % bs == 0 and bs <= 64
+
+
+def test_ragged_block_index_clamps():
+    """Dead grid steps must repeat a live block index (so Pallas elides the
+    copy) and live steps must map to themselves."""
+    f = functools.partial(_ragged_block_index, block_s=64, num_blocks=4,
+                          pos_offset=0, window=None)
+    lens = jnp.int32(130)  # needs blocks 0..2
+    got = [int(f(jnp.int32(si), lens)) for si in range(4)]
+    assert got == [0, 1, 2, 2]  # step 3 re-fetches block 2: copy elided
+    # kv_len=1 needs only block 0
+    assert [int(f(jnp.int32(si), jnp.int32(1))) for si in range(4)] == [0] * 4
+    # full cache: identity
+    assert [int(f(jnp.int32(si), jnp.int32(256))) for si in range(4)] == [0, 1, 2, 3]
+    # SWA clamps the head too: window=64, kv_len=256 -> live kpos 192..255,
+    # exactly block 3 (first = (256-64)//64 = 3); blocks 0-2 are dead steps
+    fw = functools.partial(_ragged_block_index, block_s=64, num_blocks=4,
+                           pos_offset=0, window=64)
+    assert [int(fw(jnp.int32(si), jnp.int32(256))) for si in range(4)] == [3] * 4
+    # window=96 straddles a block boundary: live kpos 160..255 -> blocks 2..3
+    fw2 = functools.partial(_ragged_block_index, block_s=64, num_blocks=4,
+                            pos_offset=0, window=96)
+    assert [int(fw2(jnp.int32(si), jnp.int32(256))) for si in range(4)] == [2, 2, 2, 3]
+    # sharded: pos_offset shifts the live range
+    fo = functools.partial(_ragged_block_index, block_s=64, num_blocks=4,
+                           pos_offset=256, window=None)
+    assert [int(fo(jnp.int32(si), jnp.int32(300))) for si in range(4)] == [0, 0, 0, 0]
+
+
+def test_decode_attention_non_power_of_two_seq():
+    """Regression: S=160 used to trip ``assert S % block_s == 0`` with the
+    default block; the wrapper now auto-picks the largest divisor (40)."""
+    k = jax.random.split(jax.random.PRNGKey(9), 3)
+    B, S, H, KVH, D = 2, 160, 4, 2, 32
+    q = jax.random.normal(k[0], (B, H, D))
+    kk = jax.random.normal(k[1], (B, S, KVH, D))
+    vv = jax.random.normal(k[2], (B, S, KVH, D))
+    cl = jnp.array([97, 160], jnp.int32)
+    o_r, l_r = ref.decode_attention(q, kk, vv, cl, return_lse=True)
+    o_p, l_p = da_pallas(q, kk, vv, cl, block_s=64, interpret=True)
+    np.testing.assert_allclose(np.array(o_p), np.array(o_r), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.array(l_p), np.array(l_r), atol=1e-3, rtol=1e-3)
+
+
+def test_decode_attention_ragged_edges():
+    """kv_len = 1 (single live slot) and kv_len = S (no dead tiles) are the
+    fetch-skip clamp's boundary cases."""
+    k = jax.random.split(jax.random.PRNGKey(10), 3)
+    B, S, H, KVH, D = 2, 256, 4, 2, 32
+    q = jax.random.normal(k[0], (B, H, D))
+    kk = jax.random.normal(k[1], (B, S, KVH, D))
+    vv = jax.random.normal(k[2], (B, S, KVH, D))
+    cl = jnp.array([1, S], jnp.int32)
+    o_r, l_r = ref.decode_attention(q, kk, vv, cl, return_lse=True)
+    o_p, l_p = da_pallas(q, kk, vv, cl, block_s=64, interpret=True)
+    np.testing.assert_allclose(np.array(o_p), np.array(o_r), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.array(l_p), np.array(l_r), atol=1e-3, rtol=1e-3)
+
+
 def test_decode_attention_sliding_window():
     k = jax.random.split(jax.random.PRNGKey(4), 3)
     B, S, H, KVH, D = 2, 256, 4, 2, 32
@@ -121,8 +195,180 @@ def test_decode_attention_sliding_window():
 
 
 # --------------------------------------------------------------------------- #
-# decode attention, fused int8 dequant (kv_quant cache path)
+# paged decode attention (block-table gather through the serving page pool)
 # --------------------------------------------------------------------------- #
+def _paged_pool(key, B, S, KVH, D, ps, extra_pages=5, dtype=jnp.float32):
+    """A contiguous cache plus the same KV scattered into a scrambled page
+    pool with per-sequence block tables (plus unowned garbage pages)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    kk = jax.random.normal(k1, (B, S, KVH, D), dtype)
+    vv = jax.random.normal(k2, (B, S, KVH, D), dtype)
+    T = S // ps
+    P = B * T + extra_pages
+    perm = np.random.default_rng(0).permutation(P)[: B * T]
+    tables = perm.reshape(B, T).astype(np.int32)
+    pool_k = jax.random.normal(k3, (P, ps, KVH, D), dtype)  # garbage base
+    pool_v = jax.random.normal(jax.random.fold_in(k3, 1), (P, ps, KVH, D), dtype)
+    kp = kk.reshape(B * T, ps, KVH, D)
+    vp = vv.reshape(B * T, ps, KVH, D)
+    pool_k = pool_k.at[perm].set(kp)
+    pool_v = pool_v.at[perm].set(vp)
+    return kk, vv, pool_k, pool_v, jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("S,H,KVH,D,ps", [
+    (64, 4, 4, 32, 8),     # MHA, small pages
+    (128, 8, 2, 64, 16),   # GQA
+    (64, 8, 1, 32, 8),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention(S, H, KVH, D, ps, dtype):
+    k = jax.random.split(jax.random.PRNGKey(11), 2)
+    B = 3
+    q = jax.random.normal(k[0], (B, H, D), dtype)
+    kk, vv, pool_k, pool_v, tables = _paged_pool(k[1], B, S, KVH, D, ps,
+                                                 dtype=dtype)
+    cl = jnp.array([S // 3, S, 1], jnp.int32)
+    o_r, l_r = ref.decode_attention(q, kk, vv, cl, return_lse=True)
+    o_p, l_p = pda_pallas(q, pool_k, pool_v, tables, cl, interpret=True)
+    np.testing.assert_allclose(np.array(o_p, np.float32),
+                               np.array(o_r, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.array(l_p), np.array(l_r), atol=1e-3, rtol=1e-3)
+
+
+def test_paged_decode_matches_ref_paged_oracle():
+    """The ref paged oracle (gather pages -> contiguous -> ref decode) and
+    the Pallas table-gather kernel agree; garbage in unowned pool pages and
+    in owned-but-dead table tails must not leak into either."""
+    k = jax.random.split(jax.random.PRNGKey(12), 2)
+    B, S, H, KVH, D, ps = 2, 64, 4, 2, 32, 8
+    q = jax.random.normal(k[0], (B, H, D))
+    _, _, pool_k, pool_v, tables = _paged_pool(k[1], B, S, KVH, D, ps)
+    cl = jnp.array([13, 50], jnp.int32)  # mid-page raggedness
+    o_r, l_r = ref.paged_decode_attention(q, pool_k, pool_v, tables, cl,
+                                          return_lse=True)
+    o_p, l_p = pda_pallas(q, pool_k, pool_v, tables, cl, interpret=True)
+    np.testing.assert_allclose(np.array(o_p), np.array(o_r), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.array(l_p), np.array(l_r), atol=1e-3, rtol=1e-3)
+
+
+# --------------------------------------------------------------------------- #
+# fused sampling (hidden @ head -> temperature -> sample, no HBM logits)
+# --------------------------------------------------------------------------- #
+def _sampler_inputs(key, B, d, V, Vp=None):
+    k1, k2 = jax.random.split(key)
+    h = jax.random.normal(k1, (B, d), jnp.float32)
+    w = jax.random.normal(k2, (d, Vp or V), jnp.float32) * 0.3
+    return h, w
+
+
+def test_fused_sample_greedy_bitwise():
+    """inv_temp == 0 must reduce to exact argmax over the true logits,
+    including jnp.argmax's first-max tie-breaking, and the returned logprob
+    is the untempered log_softmax at that token."""
+    h, w = _sampler_inputs(jax.random.PRNGKey(13), 4, 32, 384)
+    # manufacture ties: duplicate a column block
+    w = w.at[:, 100].set(w[:, 300])
+    logits = h @ w
+    seeds = jnp.arange(4, dtype=jnp.int32)
+    tok, lp = fs_pallas(h, w, seeds, jnp.zeros(4), interpret=True)
+    want = jnp.argmax(logits, axis=-1)
+    assert np.array_equal(np.array(tok), np.array(want))
+    want_lp = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(4), want]
+    np.testing.assert_allclose(np.array(lp), np.array(want_lp),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fused_sample_logprob_is_untempered():
+    """Sampled under temperature != 1, the logprob is still the UNTEMPERED
+    distribution's log_softmax at the sampled token (the behaviour-policy
+    contract of rl.rollout)."""
+    h, w = _sampler_inputs(jax.random.PRNGKey(14), 8, 32, 256)
+    logits = h @ w
+    seeds = jnp.arange(8, dtype=jnp.int32)
+    tok, lp = fs_pallas(h, w, seeds, jnp.full((8,), 1.0 / 0.7), interpret=True)
+    want_lp = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(8), tok]
+    np.testing.assert_allclose(np.array(lp), np.array(want_lp),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fused_sample_vocab_mask_never_sampled():
+    """Padded vocab columns (vocab_size < padded width) must have zero
+    sampling probability at any temperature."""
+    V, Vp = 250, 256
+    h, w = _sampler_inputs(jax.random.PRNGKey(15), 16, 32, V, Vp)
+    # make the padded tail maximally attractive
+    w = w.at[:, V:].set(10.0)
+    for it in (0.0, 1.0, 2.0):
+        for s in range(8):
+            seeds = jnp.arange(16, dtype=jnp.int32) + 16 * s
+            tok, _ = fs_pallas(h, w, seeds, jnp.full((16,), it),
+                               vocab_size=V, interpret=True)
+            assert int(jnp.max(tok)) < V
+
+
+def test_fused_sample_statistics_match_softmax():
+    """Empirical draw frequencies track softmax(logits/T) within 4 sigma —
+    the hash-Gumbel stream is a different RNG than jax.random.categorical,
+    so equivalence is distributional, not bitwise."""
+    d, V, N, temp = 16, 8, 4000, 0.9
+    h, w = _sampler_inputs(jax.random.PRNGKey(16), 1, d, V)
+    logits = (h @ w)[0]
+    p = np.array(jax.nn.softmax(logits / temp))
+    h_rep = jnp.broadcast_to(h, (N, d))
+    seeds = jnp.arange(N, dtype=jnp.int32)
+    tok, _ = fs_pallas(h_rep, w, seeds, jnp.full((N,), 1.0 / temp),
+                       interpret=True)
+    counts = np.bincount(np.array(tok), minlength=V)
+    for t in range(V):
+        sigma = max((N * p[t] * (1 - p[t])) ** 0.5, 1.0)
+        assert abs(counts[t] - N * p[t]) < 4 * sigma, (t, counts[t], N * p[t])
+
+
+def test_fused_sample_block_v_invariance():
+    """The online max/lse/winner accumulation must not depend on the vocab
+    tiling (512-wide vs full-width single tile)."""
+    h, w = _sampler_inputs(jax.random.PRNGKey(17), 4, 32, 1024)
+    seeds = jnp.arange(4, dtype=jnp.int32)
+    it = jnp.full((4,), 1.25)
+    tok_a, lp_a = fs_pallas(h, w, seeds, it, block_v=256, interpret=True)
+    tok_b, lp_b = fs_pallas(h, w, seeds, it, block_v=1024, interpret=True)
+    assert np.array_equal(np.array(tok_a), np.array(tok_b))
+    np.testing.assert_allclose(np.array(lp_a), np.array(lp_b),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_ref_fused_sample_matches_op_sequence():
+    """The ref oracle is bitwise the historical decode-path op sequence
+    (sample_token + untempered log_softmax gather) — the anchor the engines'
+    ref dispatch mode relies on."""
+    from repro.kernels import ref as kref
+    from repro.rl.rollout import sample_token
+
+    h, w = _sampler_inputs(jax.random.PRNGKey(18), 4, 32, 256)
+    logits = h @ w
+    key = jax.random.PRNGKey(99)
+    for temp in (0.0, 0.7, 1.0):
+        tok, lp = kref.fused_sample(h, w, key, temp)
+        want = sample_token(logits, key, temp)
+        assert np.array_equal(np.array(tok), np.array(want))
+        want_lp = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(4), want]
+        assert np.array_equal(np.array(lp), np.array(want_lp))
+
+
+def test_top_p_filter():
+    from repro.kernels import ref as kref
+
+    logits = jnp.log(jnp.array([[0.5, 0.3, 0.15, 0.05]]))
+    # top_p >= 1 is the identity OBJECT (python-level skip stays bitwise)
+    assert kref.top_p_filter(logits, 1.0) is logits
+
+    def kept(top_p):  # NEG_INF is a finite sentinel (-1e30), not -inf
+        return (np.array(kref.top_p_filter(logits, top_p))[0] > -1e29).tolist()
+
+    assert kept(0.75) == [True, True, False, False]
+    # the top-1 token always survives, even for tiny top_p
+    assert kept(1e-9) == [True, False, False, False]
 def _quantized_cache(key, B, S, KVH, D):
     from repro.models.lm import quant_kv
 

@@ -66,6 +66,71 @@ def test_decode_attention_random_geometry(geo, seed, data):
 
 
 @given(attn_geometry(), st.integers(0, 2**31 - 1), st.data())
+def test_ragged_decode_fetch_skip_random_geometry(geo, seed, data):
+    """Property (the ragged fetch-skip): over randomized (B, S, kv_len,
+    window, group), the grid-truncated kernel equals the full-sweep oracle.
+    kv_len draws are edge-biased — 1 (one live slot: every later tile is a
+    dead step) and S (no dead tiles: the clamp must be the identity) are
+    always in the strategy."""
+    kvh, h, d, s, block, use_window = geo
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B = 3
+    q = jax.random.normal(ks[0], (B, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, s, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, s, kvh, d), jnp.float32)
+    edge = st.one_of(st.just(1), st.just(s), st.integers(1, s))
+    cl = jnp.asarray([data.draw(edge) for _ in range(B)], jnp.int32)
+    window = data.draw(st.sampled_from([None, block, s // 2])) \
+        if use_window else None
+    o_r, l_r = ref.decode_attention(q, k, v, cl, window=window,
+                                    return_lse=True)
+    o_p, l_p = da_pallas(q, k, v, cl, window=window, block_s=block,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_r),
+                               atol=1e-3, rtol=1e-3)
+
+
+@given(st.sampled_from([1, 2, 4]),   # kv heads
+       st.sampled_from([1, 2, 4]),   # group
+       st.sampled_from([8, 16]),     # page size
+       st.integers(2, 6),            # pages per sequence
+       st.integers(0, 2**31 - 1), st.data())
+def test_paged_decode_random_tables(kvh, group, ps, t, seed, data):
+    """Property (the paged gather): for any scrambled block table over a
+    pool with unowned garbage pages, the table-gather kernel equals the
+    contiguous-cache oracle on the owned span."""
+    from repro.kernels.decode_attention import (
+        paged_decode_attention as pda_pallas,
+    )
+
+    d, B = 32, 2
+    s = t * ps
+    h = kvh * group
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, s, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, s, kvh, d), jnp.float32)
+    P = B * t + 3
+    perm = np.random.default_rng(seed & 0xFFFF).permutation(P)[: B * t]
+    tables = jnp.asarray(perm.reshape(B, t).astype(np.int32))
+    pool_k = jax.random.normal(ks[3], (P, ps, kvh, d), jnp.float32)
+    pool_v = jax.random.normal(jax.random.fold_in(ks[3], 1),
+                               (P, ps, kvh, d), jnp.float32)
+    pool_k = pool_k.at[perm].set(k.reshape(B * t, ps, kvh, d))
+    pool_v = pool_v.at[perm].set(v.reshape(B * t, ps, kvh, d))
+    edge = st.one_of(st.just(1), st.just(s), st.integers(1, s))
+    cl = jnp.asarray([data.draw(edge) for _ in range(B)], jnp.int32)
+    o_r, l_r = ref.decode_attention(q, k, v, cl, return_lse=True)
+    o_p, l_p = pda_pallas(q, pool_k, pool_v, tables, cl, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_r),
+                               atol=1e-3, rtol=1e-3)
+
+
+@given(attn_geometry(), st.integers(0, 2**31 - 1), st.data())
 def test_decode_attention_quant_random_geometry(geo, seed, data):
     """Fused int8-dequant decode kernel vs the dequantize-up-front oracle
     over random GQA geometry and per-slot cache fills."""

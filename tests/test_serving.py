@@ -44,7 +44,7 @@ def _prompt(rng, n):
 # config
 # --------------------------------------------------------------------------- #
 def test_serving_config_validation():
-    assert _scfg().pool_pages == 2 * 4 * (64 // PS)
+    assert _scfg().pool_pages == 3 * 4 * (64 // PS)
     with pytest.raises(ValueError):
         _scfg(max_len=60)  # not a page multiple
     with pytest.raises(ValueError):
