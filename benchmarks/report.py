@@ -177,6 +177,32 @@ def fleet_table() -> str:
     return "\n".join(out)
 
 
+def obs_table() -> str:
+    """Render the committed sample trace (SAMPLE_trace.json, exported by an
+    obs-enabled smoke train run): spans and busy time per host x subsystem
+    track — the at-a-glance where-does-time-go summary."""
+    path = os.path.join(RESULTS, "SAMPLE_trace.json")
+    if not os.path.exists(path):
+        return ""
+    tr = json.load(open(path))
+    evs = tr.get("traceEvents", [])
+    spans = [e for e in evs if e.get("ph") == "X"]
+    tracks = {}
+    for e in spans:
+        k = (e["pid"], e.get("cat", ""))
+        n, busy = tracks.get(k, (0, 0.0))
+        tracks[k] = (n + 1, busy + e.get("dur", 0.0))
+    out = [
+        "## Telemetry sample trace (docs/observability.md; "
+        f"{len(spans)} spans, load in Perfetto)\n",
+        "| host | subsystem | spans | busy ms |",
+        "|---|---|---|---|",
+    ]
+    for (pid, cat), (n, busy) in sorted(tracks.items()):
+        out.append(f"| host{pid} | {cat} | {n} | {busy / 1e3:.1f} |")
+    return "\n".join(out)
+
+
 def main() -> None:
     import sys
 
@@ -184,6 +210,9 @@ def main() -> None:
     rt = rollout_table()
     if rt:
         print(rt + "\n")
+    ot = obs_table()
+    if ot:
+        print(ot + "\n")
     ft = fleet_table()
     if ft:
         print(ft + "\n")

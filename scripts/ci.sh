@@ -42,7 +42,7 @@ else
   CHUNKS=(
     "tests/test_pipeline.py tests/test_rl.py tests/test_extensions.py"
     "tests/test_multidevice.py tests/test_core.py tests/test_ft.py tests/test_coordinator.py tests/test_rollout_engine.py tests/test_serving.py"
-    "tests/test_kernels.py tests/test_kernels_hypothesis.py tests/test_property.py tests/test_models_units.py tests/test_async_pipeline.py tests/test_tooling.py"
+    "tests/test_kernels.py tests/test_kernels_hypothesis.py tests/test_property.py tests/test_models_units.py tests/test_async_pipeline.py tests/test_tooling.py tests/test_obs.py tests/test_obs_hypothesis.py"
     "tests/test_algorithms.py tests/test_benchmarks.py tests/test_sharding.py tests/test_arch_smoke.py tests/test_workloads.py tests/test_envs.py"
   )
   run_docs=1
@@ -127,4 +127,24 @@ for idx in "${!pids[@]}"; do
     tail -n 40 "$log"
   fi
 done
+
+# Per-chunk wall times through the obs JSONL sink (docs/observability.md):
+# CI timing is machine-readable, same record shape the training driver
+# emits. CI_OBS_JSONL overrides the default path; failure to write the
+# timing file never fails the build.
+ci_jsonl="${CI_OBS_JSONL:-$logdir/ci_times.jsonl}"
+python - "$ci_jsonl" "$logdir" "${names[@]}" <<'PY' || true
+import sys
+from repro.obs.sinks import JSONLSink
+out, logdir, names = sys.argv[1], sys.argv[2], sys.argv[3:]
+with JSONLSink(out) as sink:
+    for n in names:
+        try:
+            with open(f"{logdir}/{n}.time") as f:
+                wall = float(f.read().strip())
+        except (OSError, ValueError):
+            continue
+        sink.write({"kind": "ci_chunk", "chunk": n, "wall_s": wall})
+print(f"[ci] chunk times -> {out}")
+PY
 exit $status

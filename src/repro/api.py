@@ -32,6 +32,7 @@ from repro.configs.base import (
     DistributedConfig,
     EnvConfig,
     ModelConfig,
+    ObsConfig,
     RolloutEngineConfig,
 )
 from repro.rl.trainer import RLConfig
@@ -62,6 +63,8 @@ class ExperimentSpec:
     env: EnvConfig = dataclasses.field(default_factory=EnvConfig)
     # multi-host fleet (docs/multihost.md); None = single-host, the default
     distributed: Optional[DistributedConfig] = None
+    # telemetry (docs/observability.md); disabled by default
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
     mesh_shape: Optional[Tuple[int, ...]] = None
     mesh_axes: Tuple[str, ...] = ("data", "model")
     prompts_per_iter: int = 8
@@ -92,6 +95,7 @@ class ExperimentSpec:
                 dataclasses.asdict(self.distributed)
                 if self.distributed is not None else None
             ),
+            "obs": dataclasses.asdict(self.obs),
             "mesh_shape": list(self.mesh_shape) if self.mesh_shape else None,
             "mesh_axes": list(self.mesh_axes),
             "prompts_per_iter": self.prompts_per_iter,
@@ -114,6 +118,7 @@ class ExperimentSpec:
                 DistributedConfig(**d["distributed"])
                 if d.get("distributed") else None
             ),
+            obs=ObsConfig(**d.get("obs", {})),
             mesh_shape=tuple(mesh_shape) if mesh_shape else None,
             mesh_axes=tuple(d.get("mesh_axes", ("data", "model"))),
             prompts_per_iter=d.get("prompts_per_iter", 8),
@@ -161,6 +166,7 @@ class ExperimentSpec:
             rollout=self.rollout,
             env=self.env,
             distributed=self.distributed,
+            obs=self.obs,
             registry=registry,
             algorithm=self.algorithm,
             seed=self.seed,

@@ -4,6 +4,7 @@ from repro.configs.base import (
     DistributedConfig,
     EnvConfig,
     ModelConfig,
+    ObsConfig,
     RolloutEngineConfig,
     ServingConfig,
     ShapeConfig,

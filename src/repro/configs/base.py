@@ -525,6 +525,40 @@ class DistributedConfig:
         return self.num_hosts > 1
 
 
+@dataclass(frozen=True)
+class ObsConfig:
+    """Telemetry flags (``repro.obs``; see ``docs/observability.md``).
+
+    Disabled (the default) is the pre-obs pipeline bit-for-bit: no tracer
+    installed, no registry allocated, every metrics dict untouched — the
+    no-overhead contract is test-asserted. Enabled, ``build_pipeline``
+    installs a process-global :class:`~repro.obs.Tracer` (host id =
+    ``DistributedConfig.process_id``) and hangs an
+    :class:`~repro.obs.ObsState` on the worker context, so spans flow from
+    DAG nodes, the async worker, the rollout engine, serving, and the fleet
+    gradient exchange into one Chrome-trace-exportable ring.
+    """
+
+    # master switch; False = zero-cost no-op everywhere
+    enabled: bool = False
+    # record spans (the ring buffer); metrics registry works regardless
+    trace: bool = True
+    # span ring capacity: newest N events kept, oldest overwritten
+    ring_capacity: int = 65536
+    # Chrome-trace JSON output path ("" = don't export automatically)
+    trace_path: str = ""
+    # per-iteration metrics JSONL output path ("" = no file sink)
+    metrics_path: str = ""
+    # on fleets: publish per-iteration snapshots over the FleetContext
+    # file plane for launch/obs_report.py aggregation
+    fleet_snapshots: bool = True
+
+    def __post_init__(self):
+        if self.ring_capacity < 1:
+            raise ValueError(
+                f"ring_capacity must be >= 1, got {self.ring_capacity}")
+
+
 # --------------------------------------------------------------------------- #
 # Input shapes (assigned): every LM arch carries the same four shape cells.
 # --------------------------------------------------------------------------- #

@@ -51,6 +51,7 @@ from repro.configs.base import AsyncPipelineConfig
 from repro.core.dag import NodeType
 from repro.core.worker import DAGWorker
 from repro.distributed.weight_sync import WeightVersionStore
+from repro.obs.trace import get_tracer
 
 
 @dataclass
@@ -171,8 +172,14 @@ class AsyncDAGWorker(DAGWorker):
             # trainer state (they coincide in this sequential simulation)
             self.ctx.actor_state = live._replace(params=behavior.params)
         try:
-            for node, fn in self.gen_queue:
-                self.execute_node(node, fn, metrics)
+            # one span over the whole generation half: on a trace timeline
+            # its width against async/train makes overlap_ratio visually
+            # checkable against the async/* metrics
+            with get_tracer().span("async/generate", cat="async",
+                                   behavior_version=self.weights.version,
+                                   inflight=len(self._inflight)):
+                for node, fn in self.gen_queue:
+                    self.execute_node(node, fn, metrics)
         finally:
             self.ctx.actor_state = live
         # continuous rollout engine (rl/rollout_engine): its measured
@@ -238,8 +245,11 @@ class AsyncDAGWorker(DAGWorker):
             data["old_logprob"] = lp * data["response_mask"]
         for k, v in data.items():
             self.buffer.put(k, v)
-        for node, fn in self.train_queue:
-            self.execute_node(node, fn, metrics)
+        with get_tracer().span("async/train", cat="async",
+                               staleness=staleness,
+                               is_corrected=corrected):
+            for node, fn in self.train_queue:
+                self.execute_node(node, fn, metrics)
         # self-clean the consumed batch: run_iteration clears (rotates) per
         # tick anyway, but a driver using the decoupled dispatch/consume API
         # must not have this batch's keys — behavior_logprob in particular —
@@ -285,6 +295,8 @@ class AsyncDAGWorker(DAGWorker):
         # back-compat with the pre-v2 PipelinedDAGWorker metric
         metrics["pipeline/staleness"] = metrics.get("async/staleness", 0.0)
         self.buffer.clear()  # intermediate data is transient (paper §6)
+        if self.ctx.obs is not None:
+            self.ctx.obs.registry.record_dict(metrics)
         return metrics
 
 

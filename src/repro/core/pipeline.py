@@ -161,6 +161,7 @@ def build_pipeline(
     rollout: Optional[RolloutEngineConfig] = None,
     env: Optional[EnvConfig] = None,
     distributed: Optional[DistributedConfig] = None,
+    obs=None,
     registry: Optional[Registry] = None,
     algorithm=None,
     seed: int = 0,
@@ -252,6 +253,23 @@ def build_pipeline(
         )
         ctx.fleet = fleet_ctx
         ctx.grad_exchange = exchange
+
+    if obs is not None and obs.enabled:
+        # Telemetry runtime: a process-global tracer (instrumented call
+        # sites reach it via obs.get_tracer) plus a registry that absorbs
+        # each iteration's metrics dict. Disabled obs leaves the global
+        # tracer untouched — the zero-overhead default path.
+        from repro import obs as obs_mod
+
+        tracer = obs_mod.Tracer(
+            enabled=obs.trace,
+            host=distributed.process_id if distributed is not None else 0,
+            capacity=obs.ring_capacity,
+        )
+        obs_mod.set_tracer(tracer)
+        ctx.obs = obs_mod.ObsState(
+            cfg=obs, tracer=tracer, registry=obs_mod.MetricsRegistry()
+        )
 
     dag = dag or spec.dag_factory()
     if env_runtime is not None:

@@ -24,6 +24,7 @@ from repro.core.dag import Node, NodeType
 from repro.core.planner import ExecutionPlan
 from repro.core.registry import Registry
 from repro.ft import straggler
+from repro.obs.trace import get_tracer
 
 
 @dataclass
@@ -50,6 +51,9 @@ class WorkerContext:
     # EnvConfig is enabled; the (ENV, COMPUTE) stage and the rollout
     # engine's episode loop both read it. None = pre-env reward path.
     env: Any = None
+    # the ObsState (repro.obs) when an ObsConfig is enabled; None = no
+    # telemetry, the zero-overhead default
+    obs: Any = None
     counters: Dict[str, float] = field(default_factory=dict)
 
     def next_key(self):
@@ -121,6 +125,8 @@ class DAGWorker:
         for node, fn in self.queue:
             self.execute_node(node, fn, metrics)
         self.buffer.clear()  # intermediate data is transient (paper §6)
+        if self.ctx.obs is not None:
+            self.ctx.obs.registry.record_dict(metrics)
         return metrics
 
     def execute_node(self, node: Node, fn, metrics: Dict[str, float]) -> None:
@@ -135,14 +141,24 @@ class DAGWorker:
             node.type == NodeType.GENERATE and self.coordinator.load_balance
         )
         pause = getattr(self.buffer, "staging_paused", None)
-        with contextlib.ExitStack() as stack:
-            if balance_here and pause is not None:
-                stack.enter_context(pause())
-            out = fn(self.ctx, self.buffer, node)
-            metrics.update(out or {})
-            metrics[f"time/{node.node_id}"] = time.perf_counter() - t0
-            if balance_here:
-                metrics.update(self._balance_rollouts())
+        with get_tracer().span(f"node/{node.node_id}", cat="dag",
+                               node=node.node_id, role=node.role) as sp:
+            try:
+                with contextlib.ExitStack() as stack:
+                    if balance_here and pause is not None:
+                        stack.enter_context(pause())
+                    out = fn(self.ctx, self.buffer, node)
+                    metrics.update(out or {})
+                    metrics[f"time/{node.node_id}"] = time.perf_counter() - t0
+                    if balance_here:
+                        metrics.update(self._balance_rollouts())
+            except BaseException:
+                # a raising stage is exactly when timing matters: keep the
+                # partial duration and flag the failure instead of losing both
+                metrics[f"time/{node.node_id}"] = time.perf_counter() - t0
+                metrics[f"error/{node.node_id}"] = 1.0
+                sp.set(error=1)
+                raise
 
     # ------------------------------------------------------------------ #
     def _num_buckets(self) -> int:

@@ -56,6 +56,7 @@ import numpy as np
 from repro.configs.base import DistributedConfig
 from repro.distributed import compression
 from repro.ft import straggler
+from repro.obs.trace import get_tracer
 
 
 class HostsLost(RuntimeError):
@@ -154,6 +155,25 @@ class FleetContext:
             target=loop, daemon=True, name="fleet-heartbeat"
         )
         self._hb_thread.start()
+
+    # -------------------------------------------------------------- #
+    # observability snapshots (repro.obs.aggregate)
+    # -------------------------------------------------------------- #
+    def publish_metrics(self, iteration: int, metrics: Dict) -> str:
+        """Ship one iteration's metrics snapshot over the file plane for
+        fleet-wide aggregation (``obs/aggregate.collect_snapshots`` /
+        ``launch/obs_report.py``). Same atomic-write discipline as
+        heartbeats; returns the snapshot path."""
+        path = os.path.join(self.root, "obs", f"host{self.process_id}",
+                            f"it{int(iteration):06d}.json")
+        payload = {
+            "host": self.process_id,
+            "iteration": int(iteration),
+            "time": time.time(),
+            "metrics": {k: float(v) for k, v in metrics.items()},
+        }
+        _atomic_write(path, json.dumps(payload).encode())
+        return path
 
     def stop_heartbeats(self) -> None:
         if self._hb_thread is not None:
@@ -379,6 +399,15 @@ class GradExchange:
 
     # ---------------- the exchange ---------------- #
     def __call__(self, grads) -> Tuple[object, Dict[str, float]]:
+        with get_tracer().span("fleet/grad_exchange", cat="fleet",
+                               step=self._step + 1,
+                               members=len(self.fleet.members),
+                               compression=self.mode) as sp:
+            out, metrics = self._exchange(grads)
+            sp.set(wire_bytes=metrics["fleet/wire_bytes"])
+            return out, metrics
+
+    def _exchange(self, grads) -> Tuple[object, Dict[str, float]]:
         fleet = self.fleet
         self._step = max(self._step + 1, fleet.iteration)
         step = self._step

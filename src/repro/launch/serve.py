@@ -32,8 +32,9 @@ from repro.utils.jax_compat import use_mesh
 
 def run_lockstep(model, params, tok, args) -> None:
     """Fixed-shape batched serving. One untimed warmup batch absorbs the
-    compile, then per-batch wall latencies feed the p50/p99 report."""
-    from repro.serving import percentiles
+    compile, then per-batch wall latencies feed a registry histogram for
+    the p50/p99 report."""
+    from repro.obs import MetricsRegistry
 
     cfg = model.cfg
     texts = [f"{i:02d}+{i + 1:02d}=" for i in range(args.batch)]
@@ -56,15 +57,16 @@ def run_lockstep(model, params, tok, args) -> None:
     for text, row in zip(texts, np.asarray(res.tokens)):
         print(f"[serve] {text!r} -> {tok.decode(row[len(text):])!r}")
 
-    served, lat = 0, []
+    served = 0
+    hist = MetricsRegistry().histogram("serve/batch_latency_s")
     t0 = time.perf_counter()
     for r in range(args.requests):
         tb = time.perf_counter()
         n, _ = one_batch(r)
-        lat.append(time.perf_counter() - tb)
+        hist.record(time.perf_counter() - tb)
         served += n
     dt = time.perf_counter() - t0
-    p = percentiles(lat)
+    p = hist.percentiles((50, 99))
     print(f"[serve] {served} tokens in {dt:.2f}s ({served / dt:.1f} tok/s, "
           f"compile excluded; batch latency p50 {p['p50'] * 1e3:.1f}ms "
           f"p99 {p['p99'] * 1e3:.1f}ms)")
@@ -72,6 +74,7 @@ def run_lockstep(model, params, tok, args) -> None:
 
 def run_streaming(model, params, args) -> None:
     """Request-streaming serving over a synthetic Poisson arrival stream."""
+    from repro.obs import MetricsRegistry
     from repro.serving import ServingEngine, synthetic_requests
 
     scfg = ServingConfig(
@@ -79,7 +82,8 @@ def run_streaming(model, params, args) -> None:
         page_size=args.page_size, prefix_cache=not args.no_prefix_cache,
         decode_burst=args.burst, yield_quota=args.yield_quota)
     eng = ServingEngine(model, scfg, params=params, eos_id=args.eos_id,
-                        key=jax.random.PRNGKey(args.seed))
+                        key=jax.random.PRNGKey(args.seed),
+                        registry=MetricsRegistry())
     reqs = synthetic_requests(
         args.num_requests, arrival_rate=args.rate, page_size=args.page_size,
         max_new=args.max_new, temperature=args.temperature, seed=args.seed)
@@ -92,15 +96,18 @@ def run_streaming(model, params, args) -> None:
         w.rid -= args.num_requests
     eng.serve(warm, realtime=False)
     eng.reset_stats()
+    eng.registry = MetricsRegistry()  # drop warmup latencies too
 
     streams = eng.serve(reqs, realtime=not args.no_realtime)
     st = eng.stats()
+    ttft = eng.registry.histogram("serving/ttft_s").percentiles((50, 99))
+    tpot = eng.registry.histogram("serving/tpot_s").percentiles((50, 99))
     print(f"[serve] {int(st['requests_finished'])} requests, "
           f"{int(st['tokens'])} tokens, "
           f"goodput {st['goodput_tokens_per_s']:.1f} tok/s")
-    print(f"[serve] TTFT p50 {st['ttft_p50_s'] * 1e3:.1f}ms "
-          f"p99 {st['ttft_p99_s'] * 1e3:.1f}ms | per-token p50 "
-          f"{st['tpot_p50_s'] * 1e3:.1f}ms p99 {st['tpot_p99_s'] * 1e3:.1f}ms")
+    print(f"[serve] TTFT p50 {ttft['p50'] * 1e3:.1f}ms "
+          f"p99 {ttft['p99'] * 1e3:.1f}ms | per-token p50 "
+          f"{tpot['p50'] * 1e3:.1f}ms p99 {tpot['p99'] * 1e3:.1f}ms")
     print(f"[serve] prefix-cache hit rate {st['prefix_hit_rate']:.0%} "
           f"({int(st['prefix_hit_tokens'])} of {int(st['prompt_tokens'])} "
           f"prompt tokens), occupancy {st['slot_occupancy']:.0%}, "

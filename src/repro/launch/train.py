@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import time
 
 from repro.api import ExperimentSpec
@@ -164,9 +163,24 @@ def main(argv=None) -> None:
                     help="ExperimentSpec JSON file; overrides the arch/rl flags")
     ap.add_argument("--dump-experiment", default=None,
                     help="write the resolved ExperimentSpec JSON here and exit")
+    ap.add_argument("--obs-trace", default=None, metavar="PATH",
+                    help="enable telemetry and export a Chrome-trace JSON "
+                         "here at the end of the run (docs/observability.md)")
+    ap.add_argument("--obs-metrics", default=None, metavar="PATH",
+                    help="enable telemetry and append per-iteration metrics "
+                         "as JSONL here")
     args = ap.parse_args(argv)
 
     exp = build_experiment(args)
+    if args.obs_trace or args.obs_metrics:
+        # flags layer on top of whatever the spec (file or CLI) carries,
+        # same precedence as --max-staleness
+        exp = dataclasses.replace(exp, obs=dataclasses.replace(
+            exp.obs,
+            enabled=True,
+            trace_path=args.obs_trace or exp.obs.trace_path,
+            metrics_path=args.obs_metrics or exp.obs.metrics_path,
+        ))
     if args.dump_experiment:
         with open(args.dump_experiment, "w") as f:
             f.write(exp.to_json())
@@ -200,6 +214,13 @@ def main(argv=None) -> None:
             pipe.ctx.actor_state = restored
             print(f"[train] resumed from {args.resume} at iteration {start}")
 
+        from repro.obs import JSONLSink, StdoutSink, iteration_record
+
+        obs_rt = getattr(pipe.ctx, "obs", None)
+        stdout_sink = StdoutSink()
+        jsonl_sink = (JSONLSink(obs_rt.cfg.metrics_path)
+                      if obs_rt is not None and obs_rt.cfg.metrics_path
+                      else None)
         for it in range(start, args.iters):
             if fleet_ctx is not None:
                 fleet_ctx.heartbeat(it)
@@ -207,12 +228,22 @@ def main(argv=None) -> None:
             metrics = pipe.worker.run_iteration()
             dt = time.perf_counter() - t0
             if it % 5 == 0 or it == args.iters - 1:
-                keep = {k: round(v, 4) for k, v in metrics.items()
-                        if not k.startswith("time/")}
-                print(f"[train] it={it} {dt:.2f}s {json.dumps(keep)}", flush=True)
+                stdout_sink.emit_iteration(it, metrics, dt)
+            if obs_rt is not None:
+                obs_rt.registry.histogram("train/step_s").record(dt)
+                if jsonl_sink is not None:
+                    jsonl_sink.write(iteration_record(it, metrics, dt))
+                if fleet_ctx is not None and obs_rt.cfg.fleet_snapshots:
+                    fleet_ctx.publish_metrics(it, metrics)
             if args.ckpt_dir and (it + 1) % args.ckpt_every == 0:
                 checkpoint.save(args.ckpt_dir, pipe.ctx.actor_state, step=it + 1)
                 print(f"[train] checkpoint @ {it + 1} -> {args.ckpt_dir}")
+        if jsonl_sink is not None:
+            jsonl_sink.close()
+        if obs_rt is not None and obs_rt.cfg.trace_path:
+            obs_rt.tracer.export_chrome(obs_rt.cfg.trace_path)
+            print(f"[train] wrote trace {obs_rt.cfg.trace_path} "
+                  f"({obs_rt.tracer.num_events} events)")
         print(f"[train] done; buffer stats: {pipe.buffer.stats}")
 
 

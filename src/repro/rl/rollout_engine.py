@@ -65,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.obs.trace import get_tracer
 from repro.rl.rollout import RolloutResult, sample_token
 
 
@@ -674,13 +675,16 @@ class ContinuousRolloutEngine:
                     if rf is None:
                         rf = self._refill_jit[(R, L, smax)] = \
                             self._make_refill(R, L, smax)
-                    (caches, cur_tok, cache_len, resp_len, done, budget,
-                     out_tok, out_lp) = rf(
-                        params, caches, jnp.asarray(batch), slots_arr,
-                        jnp.asarray(lane_budget), rk,
-                        cur_tok, cache_len, resp_len, done, budget,
-                        out_tok, out_lp,
-                    )
+                    with get_tracer().span("rollout/prefill", cat="rollout",
+                                           lanes=R, width=L,
+                                           seqs=len(idxs)):
+                        (caches, cur_tok, cache_len, resp_len, done, budget,
+                         out_tok, out_lp) = rf(
+                            params, caches, jnp.asarray(batch), slots_arr,
+                            jnp.asarray(lane_budget), rk,
+                            cur_tok, cache_len, resp_len, done, budget,
+                            out_tok, out_lp,
+                        )
                     for lane, seq in zip(lanes, idxs):
                         slot_seq[lane] = seq
                         row_cache_pos[seq] = L
@@ -702,14 +706,17 @@ class ContinuousRolloutEngine:
                     if cf is None:
                         cf = self._cont_jit[(R, L, smax)] = \
                             self._make_continue(R, L, smax)
-                    (caches, cur_tok, cache_len, resp_len, done, budget,
-                     out_tok, out_lp) = cf(
-                        params, caches, rows, slots_arr, jnp.asarray(feed),
-                        jnp.asarray(start_len.astype(np.int32)),
-                        jnp.asarray(lane_budget), ck,
-                        cur_tok, cache_len, resp_len, done, budget,
-                        out_tok, out_lp,
-                    )
+                    with get_tracer().span("rollout/refill", cat="rollout",
+                                           lanes=R, width=L,
+                                           conts=len(items)):
+                        (caches, cur_tok, cache_len, resp_len, done, budget,
+                         out_tok, out_lp) = cf(
+                            params, caches, rows, slots_arr, jnp.asarray(feed),
+                            jnp.asarray(start_len.astype(np.int32)),
+                            jnp.asarray(lane_budget), ck,
+                            cur_tok, cache_len, resp_len, done, budget,
+                            out_tok, out_lp,
+                        )
                     for lane, c in zip(lanes, items):
                         slot_seq[lane] = c.row
                     cont_refills += 1
@@ -733,11 +740,14 @@ class ContinuousRolloutEngine:
                 for s in range(S)
             )
             has_pending = jnp.asarray(len(queue) > 0 or cont_possible)
-            (caches, cur_tok, cache_len, resp_len, done, budget,
-             out_tok, out_lp, t, occ) = burst(
-                params, caches, cur_tok, cache_len, resp_len, done, budget,
-                out_tok, out_lp, t, occ, step_keys, k2, has_pending,
-            )
+            with get_tracer().span("rollout/decode", cat="rollout",
+                                   burst=bursts, completed=completed):
+                (caches, cur_tok, cache_len, resp_len, done, budget,
+                 out_tok, out_lp, t, occ) = burst(
+                    params, caches, cur_tok, cache_len, resp_len, done,
+                    budget, out_tok, out_lp, t, occ, step_keys, k2,
+                    has_pending,
+                )
             bursts += 1
 
         # assemble RolloutResult in dataset order ------------------------- #

@@ -54,12 +54,14 @@ from repro.configs.base import ServingConfig
 from repro.models.api import Model
 from repro.serving.paged_arena import ArenaOutOfPages, PagedKVArena
 from repro.serving.prefix_cache import RadixPrefixCache
+from repro.obs.trace import get_tracer
 from repro.serving.scheduler import (
     AdmissionQueue,
     Request,
     RequestStream,
     _Parked,
     percentiles,
+    record_stream_latency,
 )
 
 
@@ -100,6 +102,7 @@ class ServingEngine:
         pad_id: int = 0,
         key=None,
         clock=time.perf_counter,
+        registry=None,
     ):
         kinds = model.cfg.layer_kinds()
         if (model.is_encdec or model.cfg.num_prefix_embeds
@@ -120,6 +123,9 @@ class ServingEngine:
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.clock = clock
+        # an obs.MetricsRegistry: every finished stream's TTFT/TPOT lands
+        # in its serving/* histograms (None = keep stats() as the only view)
+        self.registry = registry
         self.weight_store = weight_store
         self._params = params
         self._weight_version = (
@@ -439,10 +445,13 @@ class ServingEngine:
                     + [matches[group[0].rid][1]] * (R - n))
                 rows = self.arena.load_rows(rows, np.arange(R), tables)
             logits = None
-            for off in range(m, lb, ps):
-                logits, rows = self._chunk_fn(R, off)(
-                    self._params, jnp.asarray(batch[:, off:off + ps]), rows)
-                self.prefill_chunks += 1
+            with get_tracer().span("serving/prefill", cat="serving",
+                                   lanes=R, bucket=lb, matched=m):
+                for off in range(m, lb, ps):
+                    logits, rows = self._chunk_fn(R, off)(
+                        self._params, jnp.asarray(batch[:, off:off + ps]),
+                        rows)
+                    self.prefill_chunks += 1
             # copy every lane's prefilled span into its own pool pages in
             # one dispatch — from here the requests' KV lives ONLY in the
             # pool (the admission rows are scratch) and decode writes
@@ -475,6 +484,7 @@ class ServingEngine:
                     reason = ("eos" if self.eos_id is not None
                               and tok0_h[j] == self.eos_id else "budget")
                     st.finish(reason)
+                    record_stream_latency(self.registry, st)
                     self.active[gl[j]] = None
                     self.arena.free(self._slot_pages[gl[j]])
                     self._slot_pages[gl[j]] = []
@@ -506,6 +516,11 @@ class ServingEngine:
             self.resumes += 1
 
     def _admit(self) -> None:
+        with get_tracer().span("serving/admit", cat="serving",
+                               queued=len(self.queue)):
+            self._admit_inner()
+
+    def _admit_inner(self) -> None:
         stalled = False
         while len(self.queue):
             # recompute each round: immediately-done admissions (EOS or a
@@ -578,6 +593,7 @@ class ServingEngine:
                 reason = ("eos" if self.eos_id is not None
                           and last == self.eos_id else "budget")
                 a.stream.finish(reason)
+                record_stream_latency(self.registry, a.stream)
                 self.active[s] = None
                 if self._slot_pages[s]:
                     self.arena.free(self._slot_pages[s])
@@ -601,6 +617,8 @@ class ServingEngine:
         self.done = self.done.at[slot].set(True)
         self.active[slot] = None
         self.parks += 1
+        get_tracer().instant("serving/park", cat="serving",
+                             rid=a.req.rid, resp_len=resp_len)
 
     def step(self) -> bool:
         """One scheduler visit: poll weights, admit, decode, flush.
@@ -608,16 +626,19 @@ class ServingEngine:
         self.poll_weights()
         self._admit()
         if self.num_active:
-            (self.arena.pool, self.cur_tok, self.cache_len, self.resp_len,
-             self.done, self.budget, self.temp, self.slot_keys,
-             self.out_tok, t, occ) = self._burst(
-                self._params, self.arena.pool, self.tables_dev,
-                self.cur_tok, self.cache_len, self.resp_len, self.done,
-                self.budget, self.temp, self.slot_keys, self.out_tok)
-            self.bursts += 1
-            self.decode_steps += int(jax.device_get(t))
-            self.active_lane_steps += int(jax.device_get(occ))
-            self._flush()
+            with get_tracer().span("serving/burst", cat="serving",
+                                   active=self.num_active):
+                (self.arena.pool, self.cur_tok, self.cache_len,
+                 self.resp_len, self.done, self.budget, self.temp,
+                 self.slot_keys, self.out_tok, t, occ) = self._burst(
+                    self._params, self.arena.pool, self.tables_dev,
+                    self.cur_tok, self.cache_len, self.resp_len, self.done,
+                    self.budget, self.temp, self.slot_keys, self.out_tok)
+                self.bursts += 1
+                self.decode_steps += int(jax.device_get(t))
+                self.active_lane_steps += int(jax.device_get(occ))
+            with get_tracer().span("serving/flush", cat="serving"):
+                self._flush()
         return bool(self.num_active or len(self.queue))
 
     def serve(self, requests: List[Request], *,

@@ -197,6 +197,20 @@ class AdmissionQueue:
 # percentile helpers + synthetic workloads (shared by launch/serve.py and
 # benchmarks/serving.py)
 # --------------------------------------------------------------------------- #
+def record_stream_latency(registry, stream: RequestStream) -> None:
+    """Feed one finished stream's TTFT/TPOT into the ``serving/ttft_s`` and
+    ``serving/tpot_s`` histograms of a :class:`repro.obs.MetricsRegistry`
+    (the engine calls this at every stream finish when built with one).
+    Rejected streams and missing values are skipped."""
+    if registry is None or stream.finish_reason == "rejected":
+        return
+    ttft, tpot = stream.ttft, stream.tpot
+    if ttft is not None:
+        registry.histogram("serving/ttft_s").record(ttft)
+    if tpot is not None:
+        registry.histogram("serving/tpot_s").record(tpot)
+
+
 def percentiles(values, ps=(50, 99)) -> Dict[str, float]:
     vals = [v for v in values if v is not None]
     if not vals:

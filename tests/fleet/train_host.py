@@ -20,6 +20,10 @@ Env contract (all set by tests/fleet/runner.FleetRunner):
   FLEET_ARTIFACT      output JSON path
   FLEET_BALANCE       "1" = enable the Data Coordinator's length-aware
                       load balancing (hierarchical on pod meshes)
+  FLEET_OBS           "1" = enable telemetry: span tracing (per-host Chrome
+                      trace exported to the workdir), and — fleet hosts
+                      only — per-iteration metrics snapshots over the file
+                      plane for launch/obs_report.py aggregation
   FLEET_WORKDIR       scratch dir (per-host checkpoint dirs live here)
 
 Elastic recovery: when a peer dies mid-run, the blocked exchange raises
@@ -47,6 +51,7 @@ def main() -> None:
     die_at = int(os.environ.get("FLEET_DIE_AT", "-1"))
     dead_after = float(os.environ.get("FLEET_DEAD_AFTER_S", "8"))
     solo = os.environ.get("FLEET_SOLO") == "1"
+    obs_on = os.environ.get("FLEET_OBS") == "1"
     artifact_path = os.environ["FLEET_ARTIFACT"]
     workdir = os.environ.get("FLEET_WORKDIR", os.path.dirname(artifact_path))
 
@@ -100,10 +105,15 @@ def main() -> None:
 
     ckpt_dir = os.path.join(workdir, f"ckpt.host{pid}{'.solo' if solo else ''}")
 
+    from repro.configs.base import ObsConfig
+
+    obs_cfg = ObsConfig(enabled=True) if obs_on else None
+
     def build():
         return build_pipeline(
             cfg, rl, mesh=mesh, prompts_per_iter=prompts_per_iter,
             coordinator=coordinator_cfg, distributed=dist_cfg, seed=seed,
+            obs=obs_cfg,
         )
 
     with use_mesh(mesh):
@@ -140,6 +150,8 @@ def main() -> None:
                 recoveries += 1
                 continue
             history[str(it)] = {k: float(v) for k, v in metrics.items()}
+            if obs_on and fleet_ctx is not None:
+                fleet_ctx.publish_metrics(it, metrics)
             checkpoint.save(
                 ckpt_dir,
                 {"actor": pipe.ctx.actor_state, "key": pipe.ctx.key},
@@ -180,6 +192,15 @@ def main() -> None:
                 "redistributions": stats.redistributions,
             },
         }
+        if obs_on:
+            trace_path = os.path.join(
+                workdir, f"trace.host{pid}{'.solo' if solo else ''}.json")
+            pipe.ctx.obs.tracer.export_chrome(trace_path)
+            art["obs"] = {
+                "trace": trace_path,
+                "snapshots_root": coord if fleet_ctx is not None else None,
+                "num_events": pipe.ctx.obs.tracer.num_events,
+            }
     tmp = artifact_path + f".tmp{os.getpid()}"
     with open(tmp, "w") as f:
         json.dump(art, f, indent=1)

@@ -60,9 +60,13 @@ def _clean(history):
 @pytest.fixture(scope="module")
 def fleet8(tmp_path_factory):
     """2-host x 4-device exact-exchange fleet + the single-host 8-device
-    reference run (same seed, same iteration count)."""
+    reference run (same seed, same iteration count). Runs with telemetry on
+    (FLEET_OBS=1: span tracing + metrics snapshots), which doubles this
+    fleet as the obs acceptance run — the parity assertions passing WITH
+    obs enabled is itself the no-interference guarantee."""
     r = FleetRunner(tmp_path_factory.mktemp("fleet8"),
-                    num_hosts=2, devices_per_host=4, iters=3)
+                    num_hosts=2, devices_per_host=4, iters=3,
+                    extra_env={"FLEET_OBS": "1"})
     r.launch()
     r.wait(timeout=FLEET_TIMEOUT)
     arts = r.artifacts()
@@ -146,6 +150,65 @@ def test_fleet_no_controller_traffic(fleet8):
     arts, solo = fleet8
     for art in list(arts.values()) + [solo]:
         assert art["buffer"]["bytes_through_controller"] == 0
+
+
+# ---------------- observability (docs/observability.md) ---------------- #
+def test_fleet_obs_trace_schema(fleet8):
+    """Each host exports a Chrome-trace JSON with the trace-event schema
+    Perfetto loads: complete ("X") events with ts/dur, per-host pid tracks
+    named by "M" metadata, per-subsystem tid tracks — and the merged fleet
+    trace carries every host's pid."""
+    import json
+
+    from repro.obs.aggregate import merge_traces
+
+    arts, _ = fleet8
+    traces = []
+    for h, art in arts.items():
+        with open(art["obs"]["trace"]) as f:
+            tr = json.load(f)
+        evs = tr["traceEvents"]
+        assert evs, f"host {h}: empty trace"
+        for ev in evs:
+            assert {"name", "ph", "pid", "tid"} <= set(ev)
+            assert ev["ph"] in ("X", "M", "i")
+            if ev["ph"] == "X":
+                assert ev["ts"] > 0 and ev["dur"] >= 0
+        assert {ev["pid"] for ev in evs} == {h}
+        meta = {ev["args"]["name"] for ev in evs if ev["ph"] == "M"}
+        assert f"host{h}" in meta  # the per-host process track
+        cats = {ev["cat"] for ev in evs if ev["ph"] == "X"}
+        # DAG node spans and the GradExchange rounds must both be on the
+        # timeline; their thread tracks are named in the metadata
+        assert {"dag", "fleet"} <= cats <= meta
+        traces.append(tr)
+    merged = merge_traces(traces)
+    assert {e["pid"] for e in merged["traceEvents"]} == set(arts)
+
+
+def test_fleet_obs_straggler_sum_match(fleet8):
+    """launch/obs_report.py aggregation ground truth: the straggler
+    report's per-host per-iteration step times equal the sums of the
+    time/* metrics each host recorded in its own artifact history."""
+    from repro.obs.aggregate import (collect_snapshots, render_report,
+                                     straggler_report)
+
+    arts, _ = fleet8
+    coord = next(iter(arts.values()))["obs"]["snapshots_root"]
+    report = straggler_report(collect_snapshots(coord))
+    assert report["hosts"] == sorted(arts)
+    for h, art in arts.items():
+        steps = report["per_host"][h]["step_times"]
+        assert sorted(steps) == sorted(int(i) for i in art["history"])
+        for it, hist in art["history"].items():
+            own = sum(v for k, v in hist.items() if k.startswith("time/"))
+            assert steps[int(it)] == pytest.approx(own, rel=1e-12)
+    # the merged fleet histogram counts every (host, iteration) step
+    n_steps = sum(len(a["history"]) for a in arts.values())
+    assert report["step_hist"]["count"] == n_steps
+    rendered = render_report(report)
+    assert "per-host summary" in rendered and "host0" in rendered
+    assert "fleet step-time p50" in rendered
 
 
 def test_fleet_clean_run_membership(fleet8):

@@ -1,0 +1,72 @@
+"""Property tests for the obs histogram laws (optional dep: hypothesis).
+
+Deterministic counterparts of both properties live in tests/test_obs.py so
+the laws stay covered when hypothesis isn't installed (the baked CI image
+doesn't ship it; ``pip install '.[test]'`` to run these).
+
+Law 1 — merge identity: quantiles are a pure function of
+(boundaries, counts, min, max), so merging per-host histograms yields
+IDENTICAL quantiles to a single histogram fed the concatenated samples.
+This is what makes the fleet straggler report's cross-host percentiles
+exact rather than approximate.
+
+Law 2 — bounded interpolation error: against numpy's ``method="lower"``
+order statistic (the one the bucket counts actually locate), the
+interpolated quantile is within one bucket width. The bound does NOT hold
+against numpy's default linear interpolation on sparse data: e.g. samples
+``[0, 0, 0, 10]`` at q=0.75 — linear interpolation jumps across the whole
+empty gap between clusters while every order statistic sits on a sample.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install '.[test]' to run these")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.obs.metrics import Histogram, exponential_boundaries  # noqa: E402
+
+BOUNDS = exponential_boundaries(1e-3, 1e3, 60)
+
+samples_strategy = st.lists(
+    st.floats(min_value=1e-4, max_value=1e4,
+              allow_nan=False, allow_infinity=False),
+    min_size=1, max_size=300)
+
+
+@settings(max_examples=200, deadline=None)
+@given(samples=samples_strategy,
+       n_hosts=st.integers(min_value=1, max_value=5),
+       q=st.floats(min_value=0.0, max_value=1.0))
+def test_merged_histograms_equal_concatenated(samples, n_hosts, q):
+    single = Histogram("all", boundaries=BOUNDS)
+    for v in samples:
+        single.record(v)
+
+    merged = Histogram("merged", boundaries=BOUNDS)
+    for part in np.array_split(np.asarray(samples), n_hosts):
+        h = Histogram("host", boundaries=BOUNDS)
+        for v in part:
+            h.record(float(v))
+        merged.merge(h)
+
+    assert merged.count == single.count
+    assert merged.quantile(q) == single.quantile(q)  # exact equality
+    assert merged.percentiles() == single.percentiles()
+
+
+@settings(max_examples=200, deadline=None)
+@given(samples=st.lists(
+    st.floats(min_value=0.0, max_value=10.0,
+              allow_nan=False, allow_infinity=False),
+    min_size=1, max_size=500),
+    q=st.sampled_from([0.5, 0.9, 0.99]))
+def test_quantile_within_one_bucket_width_of_numpy(samples, q):
+    bounds = list(np.linspace(0.0, 10.0, 101))
+    width = bounds[1] - bounds[0]
+    h = Histogram("u", boundaries=bounds)
+    for v in samples:
+        h.record(v)
+    exact = float(np.quantile(np.asarray(samples), q, method="lower"))
+    assert abs(h.quantile(q) - exact) <= width + 1e-9
